@@ -1,0 +1,34 @@
+"""Paper Fig. 11 (App. C): adapter→base pipeline — two-way reuse.
+
+The adapter screens the prompt first; the base model then generates and
+reuses the adapter's pre-activation prefill blocks.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stage_row
+from repro.serving import pipelines as P
+from repro.serving.metrics import speedup_table
+
+PROMPT_LENS = [48, 96, 192]
+
+
+def run():
+    for plen in PROMPT_LENS:
+        row = {}
+        for kind in ("lora", "alora"):
+            for seed in (9990 + plen, plen):      # warmup + measured
+                eng = make_engine(kind)
+                res = P.adapter_base(eng, adapter_name="ad0",
+                                     prompt_len=plen, eval_len=16,
+                                     gen_len=16, batch=2, seed=seed)
+            m = res.stage_metrics(eng, "final")   # the base call
+            row[kind] = m
+            emit(f"fig11/base-after-adapter/{kind}/prompt{plen}",
+                 m.means["e2e"] * 1e6, stage_row(m))
+        sp = speedup_table(row["lora"], row["alora"])
+        emit(f"fig11/speedup/prompt{plen}", 0.0,
+             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+
+
+if __name__ == "__main__":
+    run()

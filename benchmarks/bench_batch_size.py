@@ -1,0 +1,25 @@
+"""Paper Fig. 15 (App. F): batch-size effect — larger concurrent batches
+shift E2E toward decode time, motivating the paper's fixed-batch-size
+methodology for the prompt-length sweeps."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stage_row
+from repro.serving import EngineConfig
+from repro.serving import pipelines as P
+
+BATCHES = [1, 2, 4]
+
+
+def run():
+    for b in BATCHES:
+        for seed in (999, b):                     # warmup + measured
+            eng = make_engine("alora", ecfg=EngineConfig(max_running=8))
+            res = P.base_adapter(eng, adapter_names=["ad0"],
+                                 prompt_len=48, gen_len=24, eval_len=8,
+                                 batch=b, seed=seed)
+        m = res.stage_metrics(eng, "eval")
+        emit(f"fig15/eval/batch{b}", m.means["e2e"] * 1e6, stage_row(m))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 10: base→adapter→base, varying the FIRST base call's
+generation length.
+
+Prefix caching doesn't distinguish prefilled from generated blocks
+(§4.4), so speedups track total context length; queueing delays from
+LoRA prefills hit the second base call's TTFT.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stage_row
+from repro.serving import pipelines as P
+from repro.serving.metrics import speedup_table
+
+GEN_LENS = [16, 48, 96, 192]
+
+
+def run():
+    for glen in GEN_LENS:
+        rows = {}
+        for kind in ("lora", "alora"):
+            for seed in (9990 + glen, glen):      # warmup + measured
+                eng = make_engine(kind)
+                res = P.base_adapter(eng, adapter_names=["ad0"],
+                                     prompt_len=48, gen_len=glen,
+                                     eval_len=8, batch=2,
+                                     feed_back_to_base=True, seed=seed)
+            m_eval = res.stage_metrics(eng, "eval")
+            m_final = res.stage_metrics(eng, "final")
+            rows[kind] = (m_eval, m_final)
+            emit(f"fig10/eval/{kind}/gen{glen}",
+                 m_eval.means["e2e"] * 1e6, stage_row(m_eval))
+            emit(f"fig10/final-base/{kind}/gen{glen}",
+                 m_final.means["e2e"] * 1e6,
+                 f"ttft={m_final.means['ttft']*1e6:.0f}us "
+                 f"hit={m_final.means['cache_hit_frac']:.2f}")
+        sp = speedup_table(rows["lora"][0], rows["alora"][0])
+        emit(f"fig10/speedup-eval/gen{glen}", 0.0,
+             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+
+
+if __name__ == "__main__":
+    run()

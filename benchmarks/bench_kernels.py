@@ -1,0 +1,89 @@
+"""Kernel microbenchmarks.
+
+Wall-clock on CPU times the jnp reference path (the engine's CPU
+execution); the Pallas kernels are TPU artifacts validated in interpret
+mode (correctness) — interpret-mode wall time is NOT a performance
+number and is labelled as such.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.ops import alora_qkv_op, paged_attention_op
+from repro.kernels.ref import alora_qkv_ref, paged_attention_ref
+
+KEY = jax.random.key(0)
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    # aLoRA fused projection: T x d -> out with 3 adapters r=32
+    T, d, out, n, r = 512, 256, 768, 4, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (T, d))
+    w = jax.random.normal(ks[1], (d, out)) * 0.1
+    a = jax.random.normal(ks[2], (n, d, r)).at[0].set(0.0) * 0.1
+    b = jax.random.normal(ks[3], (n, r, out)) * 0.1
+    idx = jax.random.randint(ks[4], (T,), 0, n)
+
+    ref_jit = jax.jit(alora_qkv_ref)
+    us = timeit(ref_jit, x, w, a, b, idx)
+    emit("kernels/alora_qkv/jnp-ref-cpu", us,
+         f"T={T} d={d} out={out} n={n} r={r}")
+    base_jit = jax.jit(lambda x, w: x @ w)
+    us0 = timeit(base_jit, x, w)
+    emit("kernels/alora_qkv/base-matmul-cpu", us0,
+         f"adapter overhead={us/max(us0,1e-9):.2f}x")
+
+    # paged attention decode
+    B, H, KV, hd, NB, bs, nb = 8, 16, 4, 64, 128, 16, 16
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (NB, bs, KV, hd))
+    vp = jax.random.normal(ks[2], (NB, bs, KV, hd))
+    bt = jax.random.randint(ks[3], (B, nb), 0, NB)
+    ln = jnp.full((B,), nb * bs)
+    ref_pa = jax.jit(paged_attention_ref)
+    us = timeit(ref_pa, q, kp, vp, bt, ln)
+    emit("kernels/paged_attention/jnp-ref-cpu", us,
+         f"B={B} H={H} KV={KV} hd={hd} S={nb*bs}")
+
+    # interpret-mode correctness spot check (NOT a perf number)
+    o1 = paged_attention_op(q, kp, vp, bt, ln, interpret=True)
+    o2 = paged_attention_ref(q, kp, vp, bt, ln)
+    err = float(jnp.abs(o1 - o2).max())
+    emit("kernels/paged_attention/interpret-maxerr", 0.0, f"err={err:.1e}")
+
+    # SSD chunk scan (mamba2/zamba2 hot spot)
+    from repro.kernels.ops import ssd_chunk_ref, ssd_chunk_scan_op
+    Bt, S, H, P, N = 2, 256, 4, 64, 16
+    xs = jax.random.normal(ks[0], (Bt, S, H, P))
+    Bm = jax.random.normal(ks[1], (Bt, S, H, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (Bt, S, H, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, S, H)))
+    dA = -jnp.exp(jax.random.normal(ks[4], (Bt, S, H)) * 0.3) * dt
+    ref_jit = jax.jit(ssd_chunk_ref)
+    us = timeit(lambda *a: ref_jit(*a)[0], xs, Bm, Cm, dA, dt)
+    emit("kernels/ssd_chunk/jnp-ref-cpu", us,
+         f"B={Bt} S={S} H={H} P={P} N={N} (token recurrence)")
+    y1, s1 = ssd_chunk_scan_op(xs, Bm, Cm, dA, dt, chunk=64,
+                               interpret=True)
+    y2, s2 = ssd_chunk_ref(xs, Bm, Cm, dA, dt)
+    emit("kernels/ssd_chunk/interpret-maxerr", 0.0,
+         f"err={float(jnp.abs(y1 - y2).max()):.1e}")
+
+
+if __name__ == "__main__":
+    run()

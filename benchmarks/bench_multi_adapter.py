@@ -1,0 +1,35 @@
+"""Paper §4.4.1: five adapters invoked in parallel on the same (x+y)
+context + consolidated final base call."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stage_row
+from repro.serving import pipelines as P
+from repro.serving.metrics import speedup_table
+
+N_ADAPTERS = 5
+
+
+def run():
+    names = [f"ad{i}" for i in range(N_ADAPTERS)]
+    rows = {}
+    for kind in ("lora", "alora"):
+        for seed in (999, 4):                     # warmup + measured
+            eng = make_engine(kind, n_adapters=N_ADAPTERS)
+            res = P.base_adapter(eng, adapter_names=names, prompt_len=64,
+                                 gen_len=32, eval_len=8,
+                                 feed_back_to_base=True, seed=seed)
+        m_eval = res.stage_metrics(eng, "eval")
+        m_final = res.stage_metrics(eng, "final")
+        rows[kind] = (m_eval, m_final)
+        emit(f"sec441/eval-5adapters/{kind}", m_eval.means["e2e"] * 1e6,
+             stage_row(m_eval))
+        emit(f"sec441/final-base/{kind}", m_final.means["e2e"] * 1e6,
+             f"ttft={m_final.means['ttft']*1e6:.0f}us "
+             f"hit={m_final.means['cache_hit_frac']:.2f}")
+    sp = speedup_table(rows["lora"][0], rows["alora"][0])
+    emit("sec441/speedup-eval", 0.0,
+         " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark mirrors one paper table/figure at reduced scale (CPU,
+2-layer Granite-8B-family model — the paper's own base model family).
+LoRA-vs-aLoRA comparisons run both variants over identical pipelines
+with a jit warmup round first (different seed), so measured numbers are
+compute, not compilation.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core.alora import (PAPER_ALORA_RANK, PAPER_LORA_RANK,
+                              AdapterSpec, init_adapter_weights)
+from repro.models import init_params
+from repro.serving import Engine, EngineConfig
+
+KEY = jax.random.key(0)
+INV = (7, 8, 9)
+ARCH = "granite-3.2-8b"
+
+_cache: Dict = {}
+
+
+def model():
+    if "m" not in _cache:
+        cfg = get_reduced(ARCH)
+        _cache["m"] = (cfg, init_params(KEY, cfg))
+    return _cache["m"]
+
+
+def make_engine(kind: str, n_adapters: int = 1,
+                ecfg: Optional[EngineConfig] = None) -> Engine:
+    cfg, params = model()
+    rank = PAPER_ALORA_RANK if kind == "alora" else PAPER_LORA_RANK
+    ads = []
+    for i in range(n_adapters):
+        inv = tuple(x + i for x in INV) if kind == "alora" else None
+        spec = AdapterSpec(f"ad{i}", rank=rank, invocation_tokens=inv)
+        if ("w", rank, i) not in _cache:
+            _cache[("w", rank, i)] = init_adapter_weights(
+                jax.random.key(100 + i), cfg, rank)
+        ads.append((spec, _cache[("w", rank, i)]))
+    return Engine(cfg, params, adapters=ads,
+                  engine_cfg=ecfg or EngineConfig())
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def stage_row(metrics) -> str:
+    m = metrics.means
+    return (f"queue={m['queue']*1e6:.0f}us prefill={m['prefill']*1e6:.0f}us "
+            f"decode={m['decode']*1e6:.0f}us ttft={m['ttft']*1e6:.0f}us "
+            f"hit={m['cache_hit_frac']:.2f}")

@@ -1,0 +1,110 @@
+"""Render the EXPERIMENTS.md tables from the dry-run JSONL artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report            # markdown to stdout
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            recs = [json.loads(l) for l in f]
+    return recs
+
+
+def fmt_mem(r):
+    return r["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+
+
+def roofline_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful | temp GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["shape"], r["arch"])):
+        if not r["ok"]:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED | "
+                  f"— | — |")
+            continue
+        ro = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3e} | "
+              f"{ro['memory_s']:.3e} | {ro['collective_s']:.3e} | "
+              f"**{ro['dominant']}** | {ro['useful_flops_ratio']:.2f} | "
+              f"{fmt_mem(r):.1f} |")
+
+
+def dryrun_matrix(pod, multipod):
+    print("\n### Dry-run matrix (lower+compile status)\n")
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = sorted({r["arch"] for r in pod})
+    idx = {(r["arch"], r["shape"], r["mesh"]): r for r in pod + multipod}
+    print("| arch | " + " | ".join(f"{s} 16×16 / 2×16×16" for s in shapes)
+          + " |")
+    print("|---|" + "---|" * len(shapes))
+    for a in archs:
+        cells = []
+        for s in shapes:
+            p = idx.get((a, s, "16x16"))
+            m = idx.get((a, s, "2x16x16"))
+            cell = ("✓" if p and p["ok"] else "✗") + " / " + \
+                   ("✓" if m and m["ok"] else "✗")
+            cells.append(cell)
+        print(f"| {a} | " + " | ".join(cells) + " |")
+
+
+def perf_table(perf, base_idx):
+    print("\n### §Perf variants vs baseline\n")
+    print("| arch | shape | variant | compute | memory | collective | "
+          "dominant | temp GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in perf:
+        if not r["ok"]:
+            print(f"| {r['arch']} | {r['shape']} | {r.get('tag')} | "
+                  f"FAILED: {r.get('error','')[:60]} | | | | |")
+            continue
+        b = base_idx.get((r["arch"], r["shape"], "16x16"))
+        ro, bo = r["roofline"], b["roofline"] if b else None
+
+        def delta(k):
+            if not bo or not bo[k]:
+                return f"{ro[k]:.3e}"
+            return f"{ro[k]:.3e} ({ro[k]/bo[k]:.2f}×)"
+
+        row_base = f"| {r['arch']} | {r['shape']} | baseline | " \
+            f"{bo['compute_s']:.3e} | {bo['memory_s']:.3e} | " \
+            f"{bo['collective_s']:.3e} | {bo['dominant']} | " \
+            f"{fmt_mem(b):.1f} |" if bo else ""
+        if row_base:
+            print(row_base)
+        print(f"| {r['arch']} | {r['shape']} | **{r.get('tag')}** | "
+              f"{delta('compute_s')} | {delta('memory_s')} | "
+              f"{delta('collective_s')} | {ro['dominant']} | "
+              f"{fmt_mem(r):.1f} |")
+
+
+def main():
+    pod = load(os.path.join(BASE, "dryrun_all.jsonl"))
+    # dedup: last record per key wins
+    seen = {}
+    for r in pod:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    pod = list(seen.values())
+    multipod = load(os.path.join(BASE, "dryrun_multipod.jsonl"))
+    perf = load(os.path.join(BASE, "perf.jsonl"))
+    dryrun_matrix(pod, multipod)
+    roofline_table([r for r in pod if r["mesh"] == "16x16"],
+                   "Roofline — single pod (16×16), baseline")
+    if perf:
+        base_idx = {(r["arch"], r["shape"], r["mesh"]): r for r in pod}
+        perf_table(perf, base_idx)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_all.jsonl (written by ``repro.launch.dryrun --all``)
+and prints per-(arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_all.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return recs
+
+
+def run(path=DEFAULT_PATH):
+    recs = load(path)
+    if not recs:
+        print(f"roofline/no-data,0.0,run repro.launch.dryrun --all first "
+              f"({path} missing)")
+        return
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    print(f"roofline/summary,0.0,{n_ok}/{len(recs)} combos compiled OK")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if not r.get("ok"):
+            print(f"roofline/{arch}/{shape}/{mesh},0.0,"
+                  f"FAILED: {r.get('error', '?')[:80]}")
+            continue
+        ro = r["roofline"]
+        total = (ro["compute_s"] + ro["memory_s"] + ro["collective_s"])
+        print(f"roofline/{arch}/{shape}/{mesh},"
+              f"{max(ro['compute_s'], ro['memory_s'], ro['collective_s'])*1e6:.1f},"
+              f"compute={ro['compute_s']:.3e} memory={ro['memory_s']:.3e} "
+              f"collective={ro['collective_s']:.3e} "
+              f"dominant={ro['dominant']} "
+              f"useful={ro['useful_flops_ratio']:.2f} "
+              f"temp_gib={r['memory'].get('temp_size_in_bytes', 0)/2**30:.1f}")
+
+
+if __name__ == "__main__":
+    run()

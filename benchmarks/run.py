@@ -1,0 +1,38 @@
+"""Benchmark harness entrypoint — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig6 fig8  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_adapter_base, bench_async,
+                            bench_batch_size, bench_generation_length,
+                            bench_kernels, bench_multi_adapter,
+                            bench_prompt_length, roofline)
+    sections = {
+        "fig6": bench_prompt_length.run,       # prompt-length sweep
+        "fig11": bench_adapter_base.run,       # adapter->base
+        "fig10": bench_generation_length.run,  # generation-length sweep
+        "fig8": bench_async.run,               # async Poisson (+fig9)
+        "sec441": bench_multi_adapter.run,     # 5 parallel adapters
+        "fig15": bench_batch_size.run,         # batch-size effect
+        "kernels": bench_kernels.run,
+        "roofline": roofline.run,
+    }
+    chosen = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    for name in chosen:
+        t0 = time.time()
+        sections[name]()
+        print(f"section/{name}/wall_s,{(time.time()-t0)*1e6:.0f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: cross-model KV-cache reuse with Activated LoRA in 60 lines.
+
+Builds a reduced Granite-family model, registers one aLoRA "intrinsic"
+(e.g. an uncertainty-quantification head), runs the paper's atomic
+pipeline — base answers, adapter evaluates the answer — and shows the
+adapter's prefill reusing the base model's cache blocks.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.alora import AdapterSpec, init_adapter_weights
+from repro.models import init_params
+from repro.serving import Engine
+
+# 1. model + engine -----------------------------------------------------
+cfg = get_reduced("granite-3.2-8b")
+params = init_params(jax.random.key(0), cfg)
+
+# 2. one Activated-LoRA adapter: identified by its invocation tokens ----
+INV = (7, 8, 9)                      # the "<|uq|>" activation sequence
+adapter = AdapterSpec("uq", rank=32, invocation_tokens=INV)
+weights = init_adapter_weights(jax.random.key(1), cfg, rank=32)
+engine = Engine(cfg, params, adapters=[(adapter, weights)])
+
+# 3. turn 1 — the BASE model answers a prompt ---------------------------
+prompt = list(np.random.RandomState(0).randint(10, cfg.vocab_size, 120))
+rid = engine.submit(prompt, max_new_tokens=24)
+engine.run_until_idle()
+answer = engine.request(rid).output_tokens
+print(f"base answered {len(answer)} tokens")
+
+# 4. turn 2 — the aLoRA adapter EVALUATES (prompt + answer) -------------
+#    its prefill transparently reuses the base model's KV blocks: only
+#    tokens from the last un-cached block onward are recomputed.
+eval_prompt = prompt + answer + list(INV)
+rid2 = engine.submit(eval_prompt, max_new_tokens=8, adapter_name="uq")
+engine.run_until_idle()
+req = engine.request(rid2)
+m = req.metrics()
+print(f"adapter evaluation: {req.output_tokens}")
+print(f"  cache reuse: {req.n_cache_hit_tokens}/{len(eval_prompt)} tokens "
+      f"({m['cache_hit_frac']:.0%})  — vanilla LoRA would reuse 0")
+print(f"  TTFT {m['ttft']*1e3:.1f} ms   prefill {m['prefill']*1e3:.1f} ms "
+      f"  E2E {m['e2e']*1e3:.1f} ms")
+assert req.n_cache_hit_tokens > 0

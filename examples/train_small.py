@@ -1,0 +1,15 @@
+"""Train a ~reduced model for a few hundred steps on the synthetic LM
+pipeline — the training-side end-to-end driver.
+
+  PYTHONPATH=src python examples/train_small.py --arch zamba2-2.7b --steps 100
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "granite-3.2-8b",
+                                 "--steps", "100", "--batch", "4",
+                                 "--seq", "64"])
+    main()

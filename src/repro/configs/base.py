@@ -1,0 +1,197 @@
+"""Model / run configuration system.
+
+Every architecture in the assigned pool is expressed as a frozen
+:class:`ModelConfig`.  Configs are *data*: the model zoo in
+``repro.models`` consumes them, the launcher selects them by ``--arch``,
+and each config module also exposes ``reduced()`` returning a tiny
+CPU-runnable variant of the same family for smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds used in ``layer_pattern`` for hybrid architectures.
+ATTN = "attn"
+SSM = "ssm"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for the MLP sublayer."""
+
+    num_experts: int
+    experts_per_token: int
+    d_ff: int                      # per-expert hidden width
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings."""
+
+    state_dim: int                 # N — SSM state size per head
+    head_dim: int = 64             # P — channels per SSM head
+    expand: int = 2                # d_inner = expand * d_model
+    chunk_size: int = 256          # SSD chunk length
+    conv_width: int = 4            # depthwise causal conv window
+    ngroups: int = 1               # B/C groups (Mamba2 uses 1..8)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``head_dim`` is explicit (not always d_model // num_heads in modern
+    models).  ``layer_pattern`` describes hybrid stacks; when ``None`` the
+    stack is homogeneous (all-attn for dense, all-ssm for pure SSM).
+    """
+
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    activation: str = "swiglu"     # swiglu | squared_relu | gelu
+    norm_eps: float = 1e-5
+    rope_theta: float = 10_000.0
+    max_seq_len: int = 131_072
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # --- attention variant -------------------------------------------------
+    sliding_window: int = 0        # 0 = full causal attention
+    # window used when a full-attention arch is lowered for long_500k:
+    long_context_window: int = 8192
+    # --- optional subsystems ------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    layer_pattern: Optional[Tuple[str, ...]] = None
+    # --- encoder-decoder (whisper) ------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0       # fixed frames from the audio frontend stub
+    # --- modality frontend stubs --------------------------------------------
+    frontend: str = "none"         # none | audio | vision
+    num_patches: int = 0           # vision: patch embeddings prepended
+    # --- citation ------------------------------------------------------------
+    source: str = ""
+
+    # -- derived -------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0, (
+            f"{self.name}: num_heads={self.num_heads} not a multiple of "
+            f"num_kv_heads={self.num_kv_heads}")
+        if self.layer_pattern is not None:
+            assert len(self.layer_pattern) == self.num_layers
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern is not None:
+            return self.layer_pattern
+        if self.arch_type == "ssm":
+            return tuple([SSM] * self.num_layers)
+        return tuple([ATTN] * self.num_layers)
+
+    def num_attn_layers(self) -> int:
+        return sum(1 for k in self.pattern() if k == ATTN)
+
+    def num_ssm_layers(self) -> int:
+        return sum(1 for k in self.pattern() if k == SSM)
+
+    # -- parameter counting (used by rooflines / MODEL_FLOPS) ----------------
+    def param_count(self) -> int:
+        """Total parameters (embeddings included once; tied -> once)."""
+        d = self.d_model
+        n = 0
+        emb = self.vocab_size * d
+        n += emb if self.tie_embeddings else 2 * emb
+        attn = self._attn_params()
+        mlp = self._mlp_params()
+        ssm = self._ssm_params()
+        for kind in self.pattern():
+            if kind == ATTN:
+                n += attn + mlp
+            else:
+                n += ssm
+        if self.is_encoder_decoder:
+            # encoder self-attn (MHA) + mlp, decoder adds cross-attn
+            n += self.num_encoder_layers * (attn + mlp)
+            n += self.num_layers * attn        # cross-attention blocks
+        # norms are negligible but counted for honesty
+        n += (self.num_layers * 2 + 1) * d
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        total_moe = self.num_attn_layers() * self._mlp_params()
+        m = self.moe
+        dense_equiv_ff = 3 * d * m.d_ff * m.experts_per_token
+        router = d * m.num_experts
+        return full - total_moe + self.num_attn_layers() * (dense_equiv_ff + router)
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        return q + kv + o
+
+    def _mlp_params(self) -> int:
+        d = self.d_model
+        if self.moe is not None:
+            m = self.moe
+            gate_mult = 3 if self.activation == "swiglu" else 2
+            return m.num_experts * gate_mult * d * m.d_ff + d * m.num_experts
+        gate_mult = 3 if self.activation == "swiglu" else 2
+        return gate_mult * d * self.d_ff
+
+    def _ssm_params(self) -> int:
+        if self.ssm is None:
+            return 0
+        s = self.ssm
+        d = self.d_model
+        d_inner = s.expand * d
+        nheads = d_inner // s.head_dim
+        # in_proj -> [z, x, B, C, dt]
+        in_proj = d * (2 * d_inner + 2 * s.ngroups * s.state_dim + nheads)
+        conv = s.conv_width * (d_inner + 2 * s.ngroups * s.state_dim)
+        out_proj = d_inner * d
+        extra = nheads * 2 + d_inner   # A_log, dt_bias, D(+norm)
+        return in_proj + conv + out_proj + extra
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper (global).
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,29 @@
+"""granite-3.2-8b analogue — the paper's own evaluation model (Table 1).
+
+Used by the benchmark pipelines (at reduced scale on CPU) so the
+experiments mirror the paper's Granite 3.2 8B setup.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3.2-8b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,
+    activation="swiglu",
+    tie_embeddings=True,
+    source="paper Table 1 / hf:ibm-granite/granite-3.2-8b-instruct",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="granite-3.2-8b-reduced",
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=512, max_seq_len=2048,
+        dtype="float32",
+    )

@@ -1,0 +1,31 @@
+"""granite-moe-1b-a400m — MoE, 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]
+
+24L d_model=1024 16H (GQA kv=8) per-expert d_ff=512 vocab=49155.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    arch_type="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    activation="swiglu",
+    moe=MoEConfig(num_experts=32, experts_per_token=8, d_ff=512),
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="granite-moe-reduced",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=128, vocab_size=512, max_seq_len=1024,
+        moe=MoEConfig(num_experts=4, experts_per_token=2, d_ff=128),
+        dtype="float32",
+    )

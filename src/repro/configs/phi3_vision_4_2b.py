@@ -1,0 +1,35 @@
+"""phi-3-vision-4.2b — VLM backbone (phi3-mini + CLIP).
+[hf:microsoft/Phi-3-vision-128k-instruct]
+
+32L d_model=3072 32H (kv=32, MHA) d_ff=8192 vocab=32064.  The CLIP/ViT
+vision encoder + projector is a STUB: ``input_specs`` provides precomputed
+patch embeddings (B, num_patches, d_model) which are prepended to the
+token embeddings as ordinary prefix tokens — their KV blocks participate
+in cross-model prefix-cache reuse like any text block.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    activation="swiglu",
+    rope_theta=10_000.0,
+    frontend="vision",
+    num_patches=576,
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="phi-3-vision-reduced",
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=8,
+        head_dim=32, d_ff=512, vocab_size=512, num_patches=16,
+        max_seq_len=1024, dtype="float32",
+    )

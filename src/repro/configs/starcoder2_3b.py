@@ -1,0 +1,30 @@
+"""starcoder2-3b — dense GQA with native sliding-window attention.
+[arXiv:2402.19173]
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152, window 4096.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    activation="gelu",
+    rope_theta=999_999.0,
+    sliding_window=4096,       # model-card native window
+    source="arXiv:2402.19173",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="starcoder2-3b-reduced",
+        num_layers=2, d_model=256, num_heads=8, num_kv_heads=2,
+        head_dim=32, d_ff=512, vocab_size=512, max_seq_len=1024,
+        sliding_window=128, dtype="float32",
+    )

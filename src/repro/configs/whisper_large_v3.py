@@ -1,0 +1,34 @@
+"""whisper-large-v3 — audio encoder-decoder backbone. [arXiv:2212.04356]
+
+32L (decoder) d_model=1280 20H (kv=20, MHA) d_ff=5120 vocab=51866.
+Conv/mel frontend is a STUB: ``input_specs`` provides precomputed frame
+embeddings of shape (B, 1500, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    arch_type="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    activation="gelu",
+    is_encoder_decoder=True,
+    num_encoder_layers=32,
+    encoder_seq_len=1500,
+    frontend="audio",
+    max_seq_len=1_048_576,   # backbone exercised generically per assignment
+    source="arXiv:2212.04356",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="whisper-large-v3-reduced",
+        num_layers=2, num_encoder_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        encoder_seq_len=64, max_seq_len=1024, dtype="float32",
+    )

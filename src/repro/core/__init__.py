@@ -1,0 +1,26 @@
+"""The paper's contribution: cross-model KV-cache reuse with Activated
+LoRA — base-aligned block hashing, activation-aware masking, paged block
+management, and the cross-model prefix cache (incl. the beyond-paper SSM
+state-snapshot extension)."""
+from repro.core.activation_mask import (  # noqa: F401
+    adapter_index_for_positions,
+    build_batch_adapter_idx,
+    find_invocation_start,
+)
+from repro.core.alora import (  # noqa: F401
+    PAPER_ALORA_RANK,
+    PAPER_LORA_RANK,
+    AdapterSpec,
+    adapter_param_specs,
+    init_adapter_weights,
+    stack_adapters,
+    zero_adapter_weights,
+)
+from repro.core.block_hash import (  # noqa: F401
+    AdapterKey,
+    block_extra,
+    hash_block,
+    request_block_hashes,
+)
+from repro.core.kv_manager import BlockManager, OutOfBlocks  # noqa: F401
+from repro.core.prefix_cache import MatchResult, PrefixCache  # noqa: F401

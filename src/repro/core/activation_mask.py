@@ -1,0 +1,75 @@
+"""Activation-aware masking — paper Alg. 1 / Appendix A+B.
+
+The vLLM implementation passes a flat boolean mask
+(``position_within_req < inv_start[req]``) through the forward context so
+QKV layers can blend base and adapted outputs.  Our TPU-native equivalent
+merges the mask and the "which adapter" choice into a single per-token
+**adapter index**: 0 selects the zero adapter (base weights — used for
+base-model tokens AND pre-activation tokens of an aLoRA request);
+slot i>0 selects adapter i.  ``repro.models.layers.lora_delta`` consumes
+these indices inside the jitted graph, preserving XLA fusion the same way
+the paper's static mask preserves the torch graph.
+
+Functions here are host-side (numpy) — they run in the scheduler/model-
+runner metadata path, mirroring the paper's ``build_alora_metadata``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+def find_invocation_start(tokens: Sequence[int],
+                          invocation_tokens: Sequence[int]) -> Optional[int]:
+    """Index of the first token of the LAST occurrence of the invocation
+    sequence in ``tokens`` (None if absent).
+
+    aLoRA requests are identified by the presence of an
+    ``invocation_tokens`` field in the adapter config (paper §3); the
+    location of the activation sequence in the prompt is recorded here.
+    """
+    inv = list(invocation_tokens)
+    if not inv:
+        return None
+    toks = list(tokens)
+    n, m = len(toks), len(inv)
+    for start in range(n - m, -1, -1):
+        if toks[start:start + m] == inv:
+            return start
+    return None
+
+
+def adapter_index_for_positions(positions: np.ndarray, slot: int,
+                                kind: str, inv_start: int) -> np.ndarray:
+    """Per-token adapter index for one request.
+
+    positions: absolute token positions within the request (any shape).
+    vanilla "lora": the adapter applies everywhere.
+    "alora": only positions >= inv_start are adapted (activation-aware
+    masking); earlier positions keep index 0 (base weights).
+    """
+    positions = np.asarray(positions)
+    if slot == 0 or kind is None:
+        return np.zeros_like(positions, dtype=np.int32)
+    if kind == "lora":
+        return np.full_like(positions, slot, dtype=np.int32)
+    assert kind == "alora", kind
+    return np.where(positions >= inv_start, slot, 0).astype(np.int32)
+
+
+def build_batch_adapter_idx(position_rows: List[np.ndarray],
+                            slots: List[int],
+                            kinds: List[Optional[str]],
+                            inv_starts: List[int]) -> np.ndarray:
+    """Batch version (paper Appendix B): one row per running request.
+
+    position_rows: list of (S,) absolute positions per request (padded
+    rows allowed — padding positions can be anything; the tokens are
+    ignored downstream).  Returns (B, S) int32 adapter indices.
+    """
+    rows = [
+        adapter_index_for_positions(p, s, k, i)
+        for p, s, k, i in zip(position_rows, slots, kinds, inv_starts)
+    ]
+    return np.stack(rows).astype(np.int32)

@@ -1,0 +1,125 @@
+"""Activated-LoRA adapter weights (and the vanilla-LoRA baseline).
+
+Adapter weights mirror the model's segment stacking
+(``repro.models.model.period_segments``): for each attention segment a
+pytree {"aq","bq","ak","bk","av","bv"} with leading (repeats, count)
+layer dims; for each SSM segment {"a","b"} targeting ``in_proj`` (the
+beyond-paper SSM extension).  ``stack_adapters`` inserts the **zero
+adapter at index 0** and stacks the active set along a new adapter axis —
+the layout consumed by ``repro.models.layers.lora_delta``.
+
+Numerically, aLoRA and vanilla LoRA weights are identical objects; the
+difference is *where they apply* (activation-aware adapter indices,
+``repro.core.activation_mask``) and *how their blocks hash*
+(``repro.core.block_hash``).  Per the paper §4.1, adapter VALUES don't
+affect serving speed — benchmark adapters are random; rank defaults are
+the paper's (LoRA r=8, aLoRA r=32).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, SSM, ModelConfig
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dtype_of
+from repro.models.model import period_segments
+
+Params = Dict[str, Any]
+
+PAPER_LORA_RANK = 8
+PAPER_ALORA_RANK = 32
+
+
+@dataclass(frozen=True)
+class AdapterSpec:
+    """A registered adapter.
+
+    ``invocation_tokens`` present ⇒ Activated LoRA (the engine identifies
+    aLoRA requests by this field, paper §3); absent ⇒ vanilla LoRA.
+    """
+    name: str
+    rank: int
+    invocation_tokens: Optional[Tuple[int, ...]] = None
+
+    @property
+    def kind(self) -> str:
+        return "alora" if self.invocation_tokens is not None else "lora"
+
+
+def init_adapter_weights(key, cfg: ModelConfig, rank: int,
+                         zero_b: bool = False) -> Params:
+    """One adapter's weights, segment-stacked to match the model params."""
+    dtype = dtype_of(cfg)
+    repeats, segs = period_segments(cfg)
+    H, KV, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    out: Params = {}
+    a_std = 1.0 / math.sqrt(d)
+    b_std = 0.0 if zero_b else 0.02 / math.sqrt(rank)
+
+    def mk(key, shape, std):
+        if std == 0.0:
+            return jnp.zeros(shape, dtype)
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    for si, (kind, count) in enumerate(segs):
+        n = repeats * count
+        ks = jax.random.split(jax.random.fold_in(key, si), 6 * n)
+        if kind == ATTN:
+            def stack(j, shape, std):
+                return jnp.stack([mk(ks[6 * i + j], shape, std)
+                                  for i in range(n)]).reshape(
+                    (repeats, count) + shape)
+            out[f"seg{si}"] = {
+                "aq": stack(0, (d, rank), a_std),
+                "bq": stack(1, (rank, H * hd), b_std),
+                "ak": stack(2, (d, rank), a_std),
+                "bk": stack(3, (rank, KV * hd), b_std),
+                "av": stack(4, (d, rank), a_std),
+                "bv": stack(5, (rank, KV * hd), b_std),
+            }
+        else:
+            in_dim = ssm_lib.ssm_dims(cfg)[0] * 2 \
+                + 2 * cfg.ssm.ngroups * cfg.ssm.state_dim \
+                + ssm_lib.ssm_dims(cfg)[1]
+            def stack2(j, shape, std):
+                return jnp.stack([mk(ks[6 * i + j], shape, std)
+                                  for i in range(n)]).reshape(
+                    (repeats, count) + shape)
+            out[f"seg{si}"] = {
+                "a": stack2(0, (d, rank), a_std),
+                "b": stack2(1, (rank, in_dim), b_std),
+            }
+    return out
+
+
+def zero_adapter_weights(cfg: ModelConfig, rank: int) -> Params:
+    """The index-0 'no adapter' entry (all zeros ⇒ delta is exactly 0)."""
+    w = jax.eval_shape(
+        lambda k: init_adapter_weights(k, cfg, rank), jax.random.key(0))
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), w)
+
+
+def stack_adapters(cfg: ModelConfig, adapters: List[Params],
+                   rank: int) -> Params:
+    """Stack [zero, ad_1, ..., ad_n] along a new adapter axis.
+
+    Output leaves: (repeats, count, n+1, ...) — sliced per layer inside
+    the model scan, then indexed per token by ``lora_delta``.
+    """
+    all_ads = [zero_adapter_weights(cfg, rank)] + list(adapters)
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=2), *all_ads)
+
+
+def adapter_param_specs(cfg: ModelConfig, rank: int, n_adapters: int
+                        ) -> Params:
+    """Abstract stacked-adapter tree for dry-run lowering."""
+    one = jax.eval_shape(
+        lambda k: init_adapter_weights(k, cfg, rank), jax.random.key(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape[:2] + (n_adapters + 1,) + s.shape[2:], s.dtype), one)

@@ -1,0 +1,90 @@
+"""Base-aligned chained block hashing — the paper's §3 core system change.
+
+vLLM hashes each KV-cache block over (1) the tokens in the block, (2) the
+hash of the parent block, (3) extra identifiers (adapter ID, cache salt).
+By default every adapter gets its own hash namespace, which *isolates*
+adapter caches from the base model's.
+
+The paper's insight: for **Activated LoRA** requests, blocks that lie
+entirely before the activation point produce K/V *bit-identical* to the
+base model's, so the adapter ID must be **omitted** from their hash —
+making them hash-equal to (and interchangeable with) base-model blocks.
+Post-activation blocks (and every block of a vanilla LoRA request) keep
+the adapter ID.  This single rule yields the two-way reuse of paper
+Fig. 3/4: base→aLoRA and aLoRA→base (and aLoRA→sibling-aLoRA).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+BlockHash = bytes
+
+
+@dataclass(frozen=True)
+class AdapterKey:
+    """How a request's adapter affects hashing.
+
+    kind: "alora" (invocation-activated; pre-activation blocks are
+    base-aligned) or "lora" (vanilla; every block adapter-salted).
+    ``inv_start``: index of the first token of the invocation sequence
+    (aLoRA only) — K/V at/after this index are adapter-specific.
+    """
+    adapter_id: str
+    kind: str                      # "alora" | "lora"
+    inv_start: int = 0
+
+
+def hash_block(parent: Optional[BlockHash], tokens: Sequence[int],
+               extra: Tuple = ()) -> BlockHash:
+    h = hashlib.sha256()
+    h.update(parent if parent is not None else b"ROOT")
+    h.update(b"|")
+    h.update(",".join(map(str, tokens)).encode())
+    h.update(b"|")
+    h.update(repr(extra).encode())
+    return h.digest()[:16]
+
+
+def block_extra(adapter: Optional[AdapterKey], block_start: int,
+                block_end: int) -> Tuple:
+    """The ``extra`` identifiers for the block [block_start, block_end).
+
+    Base model              -> ()
+    aLoRA, block entirely before the invocation start -> ()   (base-aligned!)
+    aLoRA, block at/after the invocation start        -> (adapter_id,)
+    vanilla LoRA            -> (adapter_id,) for every block
+    """
+    if adapter is None:
+        return ()
+    if adapter.kind == "lora":
+        return (adapter.adapter_id,)
+    assert adapter.kind == "alora", adapter.kind
+    if block_end <= adapter.inv_start:
+        return ()
+    return (adapter.adapter_id,)
+
+
+def request_block_hashes(tokens: Sequence[int], block_size: int,
+                         adapter: Optional[AdapterKey] = None,
+                         salt: Tuple = ()) -> List[BlockHash]:
+    """Chained hashes for every FULL block of ``tokens``.
+
+    Partial trailing blocks are not hashed (vLLM semantics — paper Fig. 3:
+    activation tokens that don't fill a block are not cached).
+
+    ``salt`` is vLLM's cache-salt (paper §3): extra identifiers mixed
+    into EVERY block hash.  Used e.g. for multimodal requests whose
+    decoder KV depends on out-of-band content (audio frames / image
+    patches): the salt is a digest of that content.
+    """
+    out: List[BlockHash] = []
+    parent: Optional[BlockHash] = None
+    n_full = len(tokens) // block_size
+    for i in range(n_full):
+        lo, hi = i * block_size, (i + 1) * block_size
+        extra = salt + block_extra(adapter, lo, hi)
+        parent = hash_block(parent, tokens[lo:hi], extra)
+        out.append(parent)
+    return out

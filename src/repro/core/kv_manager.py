@@ -1,0 +1,125 @@
+"""Paged KV-cache block manager (vLLM-style, host-side metadata).
+
+Physical KV tensors live in a device-side pool owned by the model runner
+(``(num_blocks, block_size, kv_heads, head_dim)`` per layer); this module
+manages **block identity**: allocation, ref-counting, the hash→block
+prefix-cache index, and LRU reuse of freed-but-still-hashed blocks.
+
+vLLM semantics reproduced here (paper §3):
+
+* blocks are ref-counted; multiple requests may share a block;
+* a completed request's blocks return to the free pool but **stay in the
+  hash index** — an incoming request whose block hashes match may revive
+  them (this is what makes automatic prefix caching work across requests);
+* eviction happens lazily: allocating a fresh block pops the
+  least-recently-freed block and unregisters its hash.
+
+Because hashing is *base-aligned* (``repro.core.block_hash``), blocks
+prefilled by the base model and pre-activation blocks prefilled by any
+aLoRA adapter share hash values — cross-model reuse needs no further
+mechanism here.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.block_hash import BlockHash
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class BlockMeta:
+    ref: int = 0
+    hash: Optional[BlockHash] = None
+
+
+class BlockManager:
+    """Identity/refcount/prefix-index manager over a fixed block pool."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.meta: List[BlockMeta] = [BlockMeta() for _ in range(num_blocks)]
+        # free blocks in LRU order (least recently freed first)
+        self.free: "OrderedDict[int, None]" = OrderedDict(
+            (i, None) for i in range(num_blocks))
+        self.index: Dict[BlockHash, int] = {}
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- queries -------------------------------------------------------------
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def lookup(self, h: BlockHash) -> Optional[int]:
+        """Find a cached block by hash WITHOUT acquiring it."""
+        return self.index.get(h)
+
+    # -- acquisition ---------------------------------------------------------
+    def acquire_cached(self, h: BlockHash) -> Optional[int]:
+        """Acquire (ref+1) the block with hash ``h`` if present; revives
+        freed blocks from the pool.  Counts a hit/miss."""
+        bid = self.index.get(h)
+        if bid is None:
+            self.misses += 1
+            return None
+        if self.meta[bid].ref == 0:
+            self.free.pop(bid, None)           # revive from free pool
+        self.meta[bid].ref += 1
+        self.hits += 1
+        return bid
+
+    def allocate(self) -> int:
+        """Allocate a fresh (unhashed) block, evicting LRU if needed."""
+        if not self.free:
+            raise OutOfBlocks("KV-cache pool exhausted")
+        bid, _ = self.free.popitem(last=False)
+        m = self.meta[bid]
+        if m.hash is not None:                 # evict stale hash entry
+            if self.index.get(m.hash) == bid:
+                del self.index[m.hash]
+            self.evictions += 1
+        self.meta[bid] = BlockMeta(ref=1, hash=None)
+        return bid
+
+    # -- registration --------------------------------------------------------
+    def register(self, bid: int, h: BlockHash) -> int:
+        """Register a fully-written block under hash ``h``.
+
+        If another live block already owns this hash, keep the existing
+        mapping (dedup) and return the canonical block id.
+        """
+        existing = self.index.get(h)
+        if existing is not None and existing != bid:
+            return existing
+        self.index[h] = bid
+        self.meta[bid].hash = h
+        return bid
+
+    # -- release -------------------------------------------------------------
+    def release(self, bid: int) -> None:
+        m = self.meta[bid]
+        assert m.ref > 0, f"double free of block {bid}"
+        m.ref -= 1
+        if m.ref == 0:
+            # back to pool; hash entry stays until eviction (vLLM semantics)
+            self.free[bid] = None
+
+    def release_all(self, bids: List[int]) -> None:
+        for b in bids:
+            self.release(b)
+
+    # -- stats ---------------------------------------------------------------
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0

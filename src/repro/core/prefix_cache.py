@@ -1,0 +1,102 @@
+"""Cross-model prefix cache: base-aligned block matching + (beyond-paper)
+SSM state-snapshot matching.
+
+``PrefixCache`` sits between the scheduler and the block pool:
+
+* ``match_and_acquire(tokens, adapter)`` walks the request's chained
+  block hashes and acquires every leading block already in the pool —
+  because hashing is base-aligned, an aLoRA request transparently matches
+  blocks prefilled by the base model (and vice versa; paper Fig. 3/4).
+
+* For SSM / hybrid architectures it additionally matches **state
+  snapshots**: the recurrent state at block-aligned boundaries, keyed by
+  the same chained hash.  The deepest boundary with BOTH a snapshot and
+  full KV-block coverage determines the reuse length (pure-SSM archs have
+  no KV constraint; pure-attention archs no snapshot constraint).  This
+  extends the paper's technique to the Mamba-style models it explicitly
+  left out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core.block_hash import (AdapterKey, BlockHash,
+                                   request_block_hashes)
+from repro.core.kv_manager import BlockManager
+
+
+@dataclass
+class MatchResult:
+    n_tokens: int                      # reusable prefix length (tokens)
+    kv_blocks: List[int] = field(default_factory=list)
+    state_slot: Optional[int] = None   # SSM snapshot slot at the boundary
+    hashes: List[BlockHash] = field(default_factory=list)  # all full-block
+    #                                   hashes of the request (for later
+    #                                   registration as blocks fill)
+
+
+class PrefixCache:
+    def __init__(self, *, block_size: int,
+                 kv_manager: Optional[BlockManager] = None,
+                 state_manager: Optional[BlockManager] = None):
+        assert kv_manager is not None or state_manager is not None
+        self.block_size = block_size
+        self.kv = kv_manager
+        self.state = state_manager
+
+    # ------------------------------------------------------------------
+    def match_and_acquire(self, tokens: Sequence[int],
+                          adapter: Optional[AdapterKey],
+                          salt: tuple = ()) -> MatchResult:
+        bs = self.block_size
+        hashes = request_block_hashes(tokens, bs, adapter, salt)
+
+        # longest run of cached KV blocks
+        kv_blocks: List[int] = []
+        if self.kv is not None:
+            for h in hashes:
+                bid = self.kv.acquire_cached(h)
+                if bid is None:
+                    break
+                kv_blocks.append(bid)
+            kv_depth = len(kv_blocks)
+        else:
+            kv_depth = len(hashes)
+
+        # deepest state snapshot at/below kv_depth
+        state_slot = None
+        state_depth = 0
+        if self.state is not None:
+            for i in range(kv_depth, 0, -1):
+                if self.state.lookup(hashes[i - 1]) is not None:
+                    state_slot = self.state.acquire_cached(hashes[i - 1])
+                    state_depth = i
+                    break
+            depth = state_depth
+        else:
+            depth = kv_depth
+
+        # trim over-acquired KV blocks beyond the usable boundary
+        if self.kv is not None and depth < len(kv_blocks):
+            for bid in kv_blocks[depth:]:
+                self.kv.release(bid)
+            kv_blocks = kv_blocks[:depth]
+
+        return MatchResult(n_tokens=depth * bs, kv_blocks=kv_blocks,
+                           state_slot=state_slot, hashes=hashes)
+
+    # ------------------------------------------------------------------
+    def register_kv_block(self, h: BlockHash, bid: int) -> int:
+        """Register a just-filled KV block; returns canonical block id."""
+        assert self.kv is not None
+        return self.kv.register(bid, h)
+
+    def register_state(self, h: BlockHash, slot: int) -> int:
+        assert self.state is not None
+        return self.state.register(slot, h)
+
+    # ------------------------------------------------------------------
+    def hit_rate(self) -> float:
+        mgr = self.kv if self.kv is not None else self.state
+        return mgr.hit_rate()

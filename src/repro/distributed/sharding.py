@@ -1,0 +1,203 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec over the production mesh.
+
+Conventions (Megatron-style TP over ``model``, DP over ``pod``+``data``):
+
+* attention: Wq/Wk/Wv column-parallel (fused head dim), Wo row-parallel;
+* MLP: up/gate column-parallel, down row-parallel;
+* MoE: experts sharded over ``model`` (expert parallelism; the shard_map
+  dispatch in ``repro.models.moe`` gathers locally and psums);
+* SSM: in_proj column-parallel over the fused [z,x,B,C,dt] dim (XLA
+  reshards the component slices; splitting the fused matrix is a §Perf
+  candidate), out_proj row-parallel;
+* embeddings / unembedding vocab-sharded (vocabs padded to %512);
+* KV caches: kv-head-sharded when num_kv_heads % model_size == 0, else
+  head-dim-sharded (head_dim of every assigned arch divides 16);
+* optimizer moments: parameter specs, plus ZeRO-1 (shard the first
+  un-sharded divisible dim over ``data``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Tree = Any
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, model: str, n_lead: int) -> P:
+    """Spec for one parameter leaf.  ``n_lead`` = stacking dims (layer
+    repeats/count, adapter index) prepended as None."""
+    name = path[-1]
+    lead = (None,) * n_lead
+    core = len(shape) - n_lead
+
+    def spec(*dims):
+        assert len(dims) == core, (path, shape, dims)
+        return P(*(lead + dims))
+
+    if name in ("tok",):
+        return P(model, None)
+    if name in ("unembed",):
+        return P(None, model)
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "in_proj"):
+        if core == 3:                       # MoE expert stacks (E, d, ff)
+            return spec(model, None, None)
+        return spec(None, model)
+    if name in ("wo", "w_down", "out_proj"):
+        if core == 3:                       # MoE (E, ff, d)
+            return spec(model, None, None)
+        return spec(model, None)
+    if name in ("aq", "ak", "av", "a"):     # adapter A: (d, r)
+        return spec(None, None)
+    if name in ("bq", "bk", "bv"):          # adapter B: (r, out)
+        return spec(None, model)
+    if name == "b":                         # ssm adapter B
+        return spec(None, model)
+    # everything else (norms, router, conv, A_log, dt_bias, D, biases)
+    return P(*((None,) * len(shape)))
+
+
+def _n_lead_dims(path) -> int:
+    """blocks/segN leaves carry (repeats, count) stacking; encoder blocks
+    carry (L, 1); adapter stacks additionally an adapter dim."""
+    keys = [str(getattr(p, "key", "")) for p in path]
+    n = 0
+    if any(k.startswith("seg") for k in keys) or "blocks" in keys:
+        n = 2
+    return n
+
+
+def param_specs_tree(cfg: ModelConfig, params_shape: Tree,
+                     model_axis: str = "model",
+                     extra_lead: int = 0) -> Tree:
+    """PartitionSpec tree matching ``params_shape`` (a ShapeDtypeStruct
+    tree from ``jax.eval_shape``).  ``extra_lead`` adds leading dims
+    (e.g. the stacked-adapter axis)."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        n_lead = _n_lead_dims(path) + extra_lead
+        names = tuple(str(getattr(p, "key", p)) for p in path)
+        specs.append(_leaf_spec(names, leaf.shape, cfg, model_axis,
+                                min(n_lead, len(leaf.shape))))
+    return tdef.unflatten(specs)
+
+
+def fsdp_param_specs_tree(cfg: ModelConfig, params_shape: Tree,
+                          mesh: Mesh, data_axis: str = "data") -> Tree:
+    """Context-parallel / FSDP weight layout (§Perf iteration 3): every
+    matrix shards its first core dim over ``data`` (gathered per use);
+    nothing lives on ``model`` — that axis carries the SEQUENCE shard of
+    the activations instead.  Memory per chip matches the TP layout
+    (params / 16)."""
+    ds = mesh.shape[data_axis]
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        n_lead = min(_n_lead_dims(path), len(leaf.shape))
+        core = leaf.shape[n_lead:]
+        dims = [None] * len(leaf.shape)
+        if len(core) >= 2 and core[0] % ds == 0 and core[0] >= ds:
+            dims[n_lead] = data_axis
+        specs.append(P(*dims))
+    return tdef.unflatten(specs)
+
+
+def adapter_specs_tree(cfg: ModelConfig, ad_shape: Tree,
+                       model_axis: str = "model") -> Tree:
+    """Adapter stacks: leaves are (repeats, count, n_adapters, ...)."""
+    return param_specs_tree(cfg, ad_shape, model_axis, extra_lead=1)
+
+
+def batch_specs(batch_axes: Tuple[str, ...]) -> Dict[str, P]:
+    return {
+        "tokens": P(batch_axes, None),
+        "labels": P(batch_axes, None),
+        "mask": P(batch_axes, None),
+        "extra_embeds": P(batch_axes, None, None),
+    }
+
+
+def kv_cache_spec(cfg: ModelConfig, batch_axes, model_axis: str,
+                  batch_shardable: bool = True) -> P:
+    """(repeats, count, B, S, KV, hd)."""
+    b = batch_axes if batch_shardable else None
+    return P(None, None, b, None, model_axis, None) \
+        if _kv_on_heads(cfg, model_axis) else \
+        P(None, None, b, None, None, model_axis)
+
+
+def _kv_on_heads(cfg: ModelConfig, model_axis: str) -> bool:
+    # resolved at lowering time against the mesh in cache_specs_tree
+    return cfg.num_kv_heads % 16 == 0
+
+
+def cache_specs_tree(cfg: ModelConfig, caches_shape: Tree, mesh: Mesh,
+                     batch_axes: Tuple[str, ...],
+                     model_axis: str = "model",
+                     batch_shardable: bool = True) -> Tree:
+    """Specs for decode/prefill cache trees."""
+    ms = mesh.shape[model_axis]
+    b = batch_axes if batch_shardable else None
+
+    def leaf(path, s):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = s.shape
+        if name in ("k", "v", "xk", "xv"):
+            # (repeats, count, B, S, KV, hd) — layout must match
+            # models.model._attn_head_specs: heads only when BOTH q and
+            # kv head counts divide the model axis, else head_dim
+            if cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0:
+                return P(None, None, b, None, model_axis, None)
+            assert cfg.head_dim % ms == 0, (cfg.name, cfg.head_dim, ms)
+            return P(None, None, b, None, None, model_axis)
+        if name in ("ks", "vs"):
+            # int8-cache scales: (repeats, count, B, S, KV)
+            if cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0:
+                return P(None, None, b, None, model_axis)
+            return P(None, None, b, None, None)
+        if name == "ssm":
+            # (repeats, count, B, nh, N, P)
+            nh = shape[3]
+            return P(None, None, b,
+                     model_axis if nh % ms == 0 else None, None, None)
+        if name == "conv":
+            # (repeats, count, B, W-1, ch)
+            ch = shape[4]
+            return P(None, None, b, None,
+                     model_axis if ch % ms == 0 else None)
+        return P(*((None,) * len(shape)))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    return tdef.unflatten([leaf(p, s) for p, s in flat])
+
+
+def zero1_specs(param_spec_tree: Tree, params_shape: Tree, mesh: Mesh,
+                data_axis: str = "data") -> Tree:
+    """ZeRO-1: shard optimizer moments over ``data`` on the first dim
+    that is unsharded and divisible (beyond-paper memory optimization)."""
+    ds = mesh.shape[data_axis]
+
+    def leaf(spec: P, s) -> P:
+        dims = list(spec) + [None] * (len(s.shape) - len(spec))
+        for i, (d, cur) in enumerate(zip(s.shape, dims)):
+            if cur is None and d % ds == 0 and d >= ds:
+                dims[i] = data_axis
+                return P(*dims)
+        return spec
+
+    return jax.tree.map(leaf, param_spec_tree, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(tree_specs: Tree, mesh: Mesh) -> Tree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,72 @@
+"""Fused aLoRA QKV projection — Pallas TPU kernel.
+
+The paper's hot-path modification (Alg. 1) adds, on top of every QKV
+projection, an activation-aware masked low-rank update.  Done naively
+that is 1 big matmul + per-adapter (mask → matmul → matmul) passes over
+HBM.  This kernel fuses everything into one pass:
+
+  out[t] = x[t] @ W + (x[t] @ A[idx_t]) @ B[idx_t]
+
+TPU mapping: grid over (token tiles, output tiles); each program keeps
+its x-tile (Tt × d) resident in VMEM and runs the base matmul on the MXU
+followed by the (tiny, rank-r) adapter matmuls — the adapter weights for
+ALL stacked adapters fit VMEM because r ≤ 64, so the masked delta costs
+no extra HBM traffic for x.  Tile sizes default to MXU-aligned 256×256.
+
+Adapter index 0 is the zero adapter (base-model tokens and pre-activation
+tokens of an aLoRA request — the mask of paper Alg. 1); the kernel skips
+it by construction since the static loop starts at 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _alora_qkv_kernel(idx_ref, x_ref, w_ref, a_ref, b_ref, o_ref, *,
+                      n_adapters: int):
+    x = x_ref[...]                                     # (Tt, d)
+    acc = jnp.dot(x, w_ref[...],
+                  preferred_element_type=jnp.float32)  # (Tt, Ot) on MXU
+    idx = idx_ref[...]                                 # (Tt,)
+    for i in range(1, n_adapters):                     # static unroll
+        sel = (idx == i)
+        xm = jnp.where(sel[:, None], x, jnp.zeros_like(x))
+        xa = jnp.dot(xm, a_ref[i],
+                     preferred_element_type=jnp.float32)   # (Tt, r)
+        acc = acc + jnp.dot(xa.astype(x.dtype), b_ref[i],
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def alora_qkv(x: jax.Array, w: jax.Array, a_stack: jax.Array,
+              b_stack: jax.Array, adapter_idx: jax.Array, *,
+              t_block: int = 256, o_block: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """x: (T, d); w: (d, out); a_stack: (n, d, r); b_stack: (n, r, out);
+    adapter_idx: (T,) int32.  T % t_block == 0 and out % o_block == 0
+    (use ``repro.kernels.ops.alora_qkv_op`` for auto-padding)."""
+    T, d = x.shape
+    out = w.shape[1]
+    n, _, r = a_stack.shape
+    assert T % t_block == 0 and out % o_block == 0, (T, out)
+    grid = (T // t_block, out // o_block)
+
+    kernel = functools.partial(_alora_qkv_kernel, n_adapters=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_block,), lambda i, j: (i,)),          # idx
+            pl.BlockSpec((t_block, d), lambda i, j: (i, 0)),      # x
+            pl.BlockSpec((d, o_block), lambda i, j: (0, j)),      # w
+            pl.BlockSpec((n, d, r), lambda i, j: (0, 0, 0)),      # a
+            pl.BlockSpec((n, r, o_block), lambda i, j: (0, 0, j)),  # b
+        ],
+        out_specs=pl.BlockSpec((t_block, o_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, out), x.dtype),
+        interpret=interpret,
+    )(adapter_idx, x, w, a_stack, b_stack)

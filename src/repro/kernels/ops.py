@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels: shape padding, dtype
+handling, and CPU fallback (interpret mode) so the same call sites work
+in tests (CPU) and production (TPU)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.alora_qkv import alora_qkv
+from repro.kernels.paged_attention import paged_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("t_block", "o_block", "interpret"))
+def alora_qkv_op(x: jax.Array, w: jax.Array, a_stack: jax.Array,
+                 b_stack: jax.Array, adapter_idx: jax.Array, *,
+                 t_block: int = 256, o_block: int = 256,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Padded/jitted fused aLoRA projection.  x: (T, d) -> (T, out)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    T, d = x.shape
+    out = w.shape[1]
+    tb = min(t_block, max(T, 8))
+    ob = min(o_block, out)
+    Tp = ((T + tb - 1) // tb) * tb
+    Op = ((out + ob - 1) // ob) * ob
+    xp = jnp.pad(x, ((0, Tp - T), (0, 0)))
+    ip = jnp.pad(adapter_idx, (0, Tp - T))
+    wp = jnp.pad(w, ((0, 0), (0, Op - out)))
+    bp = jnp.pad(b_stack, ((0, 0), (0, 0), (0, Op - out)))
+    y = alora_qkv(xp, wp, a_stack, bp, ip, t_block=tb, o_block=ob,
+                  interpret=interpret)
+    return y[:T, :out]
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_op(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_tables: jax.Array, lengths: jax.Array, *,
+                       window: int = 0,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Paged GQA decode attention.  q: (B, H, hd) -> (B, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return paged_attention(q, k_pool, v_pool, block_tables, lengths,
+                           window=window, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
+                      dA: jax.Array, dt: jax.Array, *, chunk: int = 128,
+                      interpret: Optional[bool] = None):
+    """Padded/jitted SSD chunk scan.  Pads S to a chunk multiple with
+    dt=0 (decay 1, zero input ⇒ state invariant)."""
+    from repro.kernels.ssd_chunk import ssd_chunk_scan
+    if interpret is None:
+        interpret = not _on_tpu()
+    Bt, S, H, P = x.shape
+    ch = min(chunk, max(S, 8))
+    Sp = ((S + ch - 1) // ch) * ch
+    pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+    xp = jnp.pad(x, pad)
+    Bp = jnp.pad(B, pad[:2] + ((0, 0), (0, 0)))
+    Cp = jnp.pad(C, pad[:2] + ((0, 0), (0, 0)))
+    dAp = jnp.pad(dA, ((0, 0), (0, Sp - S), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+    y, st = ssd_chunk_scan(xp, Bp, Cp, dAp, dtp, chunk=ch,
+                           interpret=interpret)
+    return y[:, :S], st
+
+
+# pure-jnp oracles re-exported for benchmarks/tests
+paged_attention_ref = ref.paged_attention_ref
+alora_qkv_ref = ref.alora_qkv_ref
+ssd_chunk_ref = ref.ssd_chunk_ref

@@ -1,0 +1,117 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+The decode-side hot spot of the serving engine: one query token per
+sequence attends over KV stored in non-contiguous PagedAttention blocks.
+
+TPU adaptation of the CUDA PagedAttention kernel (DESIGN.md §2): the
+per-sequence block table lives in SMEM via **scalar prefetch**, so the
+BlockSpec ``index_map`` of the K/V pools can translate (sequence, kv
+head, block-step) grid coordinates into *physical* block ids — the
+gather happens in the HBM→VMEM DMA itself, no materialized (B, S, ...)
+gather.  Online softmax runs in fp32 VMEM scratch across the block-step
+grid dimension (innermost, so the accumulator carries correctly), with
+GQA handled by blocking all G query heads of one KV head together
+(G × hd tile on the MXU per step).
+
+Sliding windows mask positions ≤ len-1-W (the engine keeps whole blocks;
+ring-buffer compaction is the dense serve-path's job).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_scr, l_scr, acc_scr, *,
+                       bs: int, window: int, scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                   # (G, hd)
+    k = k_ref[0, :, 0]                                # (bs, hd)
+    v = v_ref[0, :, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    length = lengths_ref[b]
+    pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < length
+    if window > 0:
+        valid = valid & (pos > length - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)                  # (G, bs)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + \
+        jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ib == nb - 1)
+    def _fin():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    window: int = 0, interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_pool/v_pool: (NB, bs, KV, hd);
+    block_tables: (B, nb) int32; lengths: (B,) int32.  Returns (B, H, hd).
+    Matches ``repro.kernels.ref.paged_attention_ref``."""
+    B, H, hd = q.shape
+    NB, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    qr = q.reshape(B, KV, G, hd)
+    kernel = functools.partial(_paged_attn_kernel, bs=bs, window=window,
+                               scale=scale)
+    grid = (B, KV, nb)                     # block-step innermost
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, kv, ib, tables, lens:
+                             (b, kv, 0, 0)),                     # q
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, kv, ib, tables, lens:
+                             (tables[b, ib], 0, kv, 0)),         # k
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, kv, ib, tables, lens:
+                             (tables[b, ib], 0, kv, 0)),         # v
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, kv, ib, tables, lens:
+                                   (b, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),        # m
+                pltpu.VMEM((G,), jnp.float32),        # l
+                pltpu.VMEM((G, hd), jnp.float32),     # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qr, k_pool, v_pool)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels (and the serving engine's
+CPU execution path).
+
+Each function here is the numerical ground truth its kernel twin in this
+package must match (``tests/test_kernels.py`` sweeps shapes/dtypes and
+asserts allclose in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, lengths: jax.Array, *,
+                        window: int = 0) -> jax.Array:
+    """Decode-time GQA attention over paged KV blocks.
+
+    q:            (B, H, hd)           — one query token per sequence
+    k_pool/v_pool:(NB, bs, KV, hd)     — global block pools
+    block_tables: (B, nb) int32        — per-sequence physical block ids
+                                         (padding entries may be any id)
+    lengths:      (B,) int32           — valid tokens per sequence
+    window:       sliding-window size (0 = full)
+
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    NB, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    k = k_pool[block_tables].reshape(B, nb * bs, KV, hd)
+    v = v_pool[block_tables].reshape(B, nb * bs, KV, hd)
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(nb * bs, dtype=jnp.int32)[None, :]
+    valid = pos < lengths[:, None]
+    if window > 0:
+        valid = valid & (pos > lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_chunk_ref(x: jax.Array, B: jax.Array, C: jax.Array,
+                  dA: jax.Array, dt: jax.Array):
+    """Token-by-token SSD recurrence oracle.
+
+    x: (Bt, S, H, P); B/C: (Bt, S, H, N); dA/dt: (Bt, S, H).
+      state_t = exp(dA_t)·state_{t-1} + dt_t·(B_t ⊗ x_t)
+      y_t     = C_t · state_t
+    Returns (y (Bt,S,H,P) in x.dtype, final_state (Bt,H,N,P) fp32).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(state, inp):
+        x_t, b_t, c_t, da_t, dt_t = inp
+        state = jnp.exp(da_t)[..., None, None] * state + \
+            jnp.einsum("bhn,bhp->bhnp", b_t * dt_t[..., None],
+                       x_t.astype(jnp.float32))
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          B.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32),
+          dA.swapaxes(0, 1), dt.swapaxes(0, 1))
+    state0 = jnp.zeros((Bt, H, N, P), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def alora_qkv_ref(x: jax.Array, w: jax.Array, a_stack: jax.Array,
+                  b_stack: jax.Array, adapter_idx: jax.Array) -> jax.Array:
+    """Fused base-projection + activation-aware masked low-rank delta.
+
+    x:           (T, d)
+    w:           (d, out)
+    a_stack:     (n, d, r)   — index 0 is the zero adapter
+    b_stack:     (n, r, out)
+    adapter_idx: (T,) int32
+
+    out[t] = x[t] @ w + (x[t] @ a[idx_t]) @ b[idx_t]
+    """
+    base = x @ w
+    n = a_stack.shape[0]
+    delta = jnp.zeros_like(base)
+    for i in range(1, n):
+        sel = (adapter_idx == i)[:, None].astype(x.dtype)
+        delta = delta + ((x * sel) @ a_stack[i]) @ b_stack[i]
+    return base + delta

@@ -1,0 +1,114 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+The compute hot-spot of the SSM architectures (mamba2-2.7b, zamba2-2.7b):
+the chunked state-space-duality scan.  Per (batch, head) the sequence is
+processed in chunks of Q tokens; within a chunk the computation is three
+MXU matmuls (C·Bᵀ (Q×Q), the masked-decay weighted W·x (Q×P), and the
+inter-chunk C·state (Q×N)(N×P)); across chunks a (N×P) recurrent state
+carries in fp32 VMEM scratch — the same accumulate-over-innermost-grid-dim
+pattern as the paged-attention kernel.
+
+TPU adaptation of the paper's (Dao & Gu) CUDA kernel: the chunk dim Q is
+the MXU-aligned tile (128/256), the state (N×P ≤ 128×64) stays resident
+in VMEM for the whole (b, h) row of the grid, and the decay matrix
+L = exp(segsum(dA)) is built in-register from a cumulative sum rather
+than shared-memory shuffles.
+
+Semantics (matching ``repro.kernels.ref.ssd_chunk_ref``):
+  state_t = exp(dA_t) · state_{t-1} + dt_t · B_t ⊗ x_t
+  y_t     = C_t · state_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, da_ref, dt_ref, y_ref, st_ref,
+                state_scr, *, Q: int):
+    c_idx = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)            # (Q, P)
+    B = b_ref[0, :, 0].astype(jnp.float32)            # (Q, N)
+    C = c_ref[0, :, 0].astype(jnp.float32)            # (Q, N)
+    dA = da_ref[0, :, 0]                              # (Q,)
+    dt = dt_ref[0, :, 0]                              # (Q,)
+
+    csum = jnp.cumsum(dA)                             # (Q,)
+    total = csum[-1]
+    # intra-chunk: y_diag[q] = sum_{k<=q} C_q·B_k e^{csum_q-csum_k} dt_k x_k
+    diff = csum[:, None] - csum[None, :]              # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(qi >= ki, jnp.exp(diff), 0.0)
+    CB = jnp.dot(C, B.T, preferred_element_type=jnp.float32)
+    W = CB * L * dt[None, :]
+    y = jnp.dot(W, x, preferred_element_type=jnp.float32)
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]
+    y = y + jnp.dot(C * jnp.exp(csum)[:, None], state,
+                    preferred_element_type=jnp.float32)
+    # state update
+    decay = jnp.exp(total - csum) * dt                # (Q,)
+    state = jnp.exp(total) * state + \
+        jnp.dot((B * decay[:, None]).T, x,
+                preferred_element_type=jnp.float32)
+    state_scr[...] = state
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == nc - 1)
+    def _fin():
+        st_ref[0, 0] = state.astype(st_ref.dtype)
+
+
+def ssd_chunk_scan(x: jax.Array, B: jax.Array, C: jax.Array,
+                   dA: jax.Array, dt: jax.Array, *, chunk: int = 128,
+                   interpret: bool = False):
+    """x: (Bt, S, H, P); B/C: (Bt, S, H, N); dA/dt: (Bt, S, H) fp32.
+    S % chunk == 0 (use ``repro.kernels.ops.ssd_chunk_scan_op`` for
+    auto-padding).  Returns (y (Bt,S,H,P), final_state (Bt,H,N,P))."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (Bt, H, nc)                                # chunk innermost
+
+    kernel = functools.partial(_ssd_kernel, Q=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P),
+                         lambda b, h, c: (b, c, h, 0)),   # x
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c: (b, c, h, 0)),   # B
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c: (b, c, h, 0)),   # C
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b, h, c: (b, c, h)),      # dA
+            pl.BlockSpec((1, chunk, 1),
+                         lambda b, h, c: (b, c, h)),      # dt
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P),
+                         lambda b, h, c: (b, c, h, 0)),   # y
+            pl.BlockSpec((1, 1, N, P),
+                         lambda b, h, c: (b, h, 0, 0)),   # final state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, B, C, dA, dt)
+    return y, st

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract memory/cost/collective analysis.
+
+This is the hardware-free proof that the distribution config is coherent:
+a sharding mismatch, a compile-time OOM, or an unsupported collective
+fails HERE.  The roofline table (EXPERIMENTS.md §Roofline) is derived
+from the artifacts this script writes.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh pod --out results/dryrun
+  python -m repro.launch.dryrun --arch mamba2-2.7b --shape long_500k \
+      --mesh multipod
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.hlo_analysis import (CollectiveStats, Roofline,
+                                       model_flops_for, parse_collectives,
+                                       roofline_from_compiled)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, make_runtime
+from repro.models.model import period_segments
+
+
+def scaled_config(cfg, r: int):
+    """Config with r periods of layers (for unrolled cost extrapolation)."""
+    repeats, segs = period_segments(cfg)
+    period = cfg.num_layers // repeats
+    kw = {"num_layers": r * period}
+    if cfg.layer_pattern is not None:
+        kw["layer_pattern"] = cfg.layer_pattern[:period] * r
+    if cfg.is_encoder_decoder:
+        enc_per = cfg.num_encoder_layers // repeats
+        kw["num_encoder_layers"] = max(enc_per * r, 1)
+    return cfg.replace(**kw)
+
+
+def _compile_and_cost(cfg, shape, mesh, rt):
+    """(per-device flops, bytes, CollectiveStats, compiled) for one cfg."""
+    spec = build_step(cfg, shape, mesh, rt=rt)
+    with mesh:
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
+        compiled = jitted.lower(*spec.args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    return flops, nbytes, parse_collectives(compiled.as_text()), compiled
+
+
+def extrapolated_roofline(cfg, shape, mesh, rt, chips) -> Roofline:
+    """XLA cost_analysis counts a scanned layer body ONCE regardless of
+    trip count, so costs of the full scanned model are understated ~L×.
+    We compile UNROLLED 1-period and 2-period variants and extrapolate
+    linearly: cost(R) = cost(1) + (R-1) * (cost(2) - cost(1)).
+
+    bf16 correction: the CPU backend legalizes bf16 to f32, exactly
+    doubling every byte count (collective result shapes in the compiled
+    HLO are f32).  On the TPU target those tensors are bf16, so byte
+    terms are halved for bf16 models (fp32 reductions like SSM states
+    are slightly under-counted; noted in EXPERIMENTS.md)."""
+    repeats, _ = period_segments(cfg)
+    rt_u = dataclasses.replace(rt, unroll_layers=True)
+    f1, b1, c1, _ = _compile_and_cost(scaled_config(cfg, 1), shape, mesh,
+                                      rt_u)
+    f2, b2, c2, _ = _compile_and_cost(scaled_config(cfg, 2), shape, mesh,
+                                      rt_u)
+    R = repeats
+    corr = 0.5 if cfg.dtype == "bfloat16" else 1.0
+    flops = f1 + (R - 1) * (f2 - f1)
+    nbytes = (b1 + (R - 1) * (b2 - b1)) * corr
+    coll = CollectiveStats()
+    kinds = set(c1.by_kind) | set(c2.by_kind)
+    for k in kinds:
+        v1, v2 = c1.by_kind.get(k, 0), c2.by_kind.get(k, 0)
+        n1, n2 = c1.counts.get(k, 0), c2.counts.get(k, 0)
+        coll.by_kind[k] = int((v1 + (R - 1) * (v2 - v1)) * corr)
+        coll.counts[k] = int(n1 + (R - 1) * (n2 - n1))
+    return Roofline(flops=flops, hbm_bytes=nbytes, collective=coll,
+                    chips=chips, model_flops=model_flops_for(cfg, shape))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            rt_overrides=None, verbose: bool = True,
+            extrapolate: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+    try:
+        rt = make_runtime(cfg, mesh, shape, **(rt_overrides or {}))
+        # 1) the REAL artifact: full model, scanned layers — proves the
+        #    sharding lowers+compiles and gives the memory analysis
+        flops_raw, bytes_raw, coll_raw, compiled = _compile_and_cost(
+            cfg, shape, mesh, rt)
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        # 2) roofline terms from unrolled 1-/2-period extrapolation.
+        #    The roofline table is single-pod only (the multi-pod pass
+        #    proves the `pod` axis shards) — skip the extra compiles there.
+        if multi_pod:
+            extrapolate = False
+        if extrapolate:
+            roof = extrapolated_roofline(cfg, shape, mesh, rt, chips)
+        else:
+            roof = roofline_from_compiled(compiled, chips,
+                                          model_flops_for(cfg, shape))
+        rec["roofline"] = roof.summary()
+        rec["roofline_raw_scanned"] = {
+            "flops_per_device": flops_raw,
+            "hbm_bytes_per_device": bytes_raw,
+            "collective_result_bytes": coll_raw.total_result_bytes(),
+        }
+        rec["compile_s"] = round(t_compile, 1)
+        rec["ok"] = True
+        if verbose:
+            r = rec["roofline"]
+            print(f"[OK] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+                  f"compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s "
+                  f"dominant={r['dominant']:10s} "
+                  f"useful={r['useful_flops_ratio']:.2f} "
+                  f"(compile {rec['compile_s']}s)")
+            print(f"     temp/device={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"args/device={rec['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} {rec['mesh']}: "
+                  f"{rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="append JSONL records here")
+    ap.add_argument("--set", action="append", default=[],
+                    help="Runtime override, e.g. --set flash_remat=true "
+                         "--set capacity_factor=1.0 (repeatable) — used "
+                         "by the §Perf hillclimbing iterations")
+    ap.add_argument("--tag", default=None,
+                    help="label recorded with the result (perf variants)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = float(v)
+
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, rt_overrides=overrides)
+                if args.tag:
+                    rec["tag"] = args.tag
+                    rec["overrides"] = overrides
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".",
+                                exist_ok=True)
+                    with open(args.out, "a") as f:
+                        rec.pop("traceback", None)
+                        f.write(json.dumps(rec) + "\n")
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Compiled-HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective
+traffic; we parse the compiled HLO text and sum the result-shape bytes of
+every collective op, bucketed by kind.  Wire-byte estimates use standard
+ring-algorithm factors on the per-chip shard size.
+
+Roofline terms (TPU v5e):
+  compute    = HLO_FLOPs / (chips × 197e12 FLOP/s bf16)
+  memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+  collective = wire_bytes_per_chip / 50e9 B/s per ICI link
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# matches e.g.:  %all-gather.3 = bf16[2,1024,128]{2,1,0:T(8,128)} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    # result bytes per collective kind (per-chip shard sizes)
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    def total_result_bytes(self) -> int:
+        return sum(self.by_kind.values())
+
+    def wire_bytes(self, n_shards: int = 16) -> float:
+        """Ring-algorithm wire-traffic estimate per chip."""
+        f = (n_shards - 1) / max(n_shards, 1)
+        w = 0.0
+        for kind, b in self.by_kind.items():
+            if kind == "all-reduce":
+                w += 2 * f * b          # reduce-scatter + all-gather
+            elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                w += f * b
+            else:                        # collective-permute
+                w += b
+        return w
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        # async pairs (-start/-done) appear twice; count the op once
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        header = hlo_text[line_start:m.start()]
+        if "-done" in hlo_text[m.start():m.end()]:
+            continue
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + nbytes
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    """cost_analysis() of an SPMD module is PER-DEVICE (the module is the
+    per-device program); parsed collective result shapes are per-device
+    shards likewise.  All terms below are per-chip seconds."""
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    collective: CollectiveStats = field(default_factory=CollectiveStats)
+    chips: int = 256
+    model_flops: float = 0.0     # 6·N·D (train) or 2·N·D (inference),
+    #                              GLOBAL — divided by chips for the ratio
+
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    def collective_s(self, n_shards: int = 16) -> float:
+        return self.collective.wire_bytes(n_shards) / ICI_BW
+
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s(), "memory": self.memory_s(),
+                 "collective": self.collective_s()}
+        return max(terms, key=terms.get)
+
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_result_bytes":
+                self.collective.total_result_bytes(),
+            "collective_counts": dict(self.collective.counts),
+            "compute_s": self.compute_s(),
+            "memory_s": self.memory_s(),
+            "collective_s": self.collective_s(),
+            "dominant": self.dominant(),
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio(),
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(flops=flops, hbm_bytes=nbytes, collective=stats,
+                    chips=chips, model_flops=model_flops)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D forward."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.mode == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1
+    return 2.0 * n * d

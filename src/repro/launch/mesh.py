@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16) — the
+``pod`` axis carries only data parallelism (gradient all-reduce crosses
+the inter-pod DCN; everything bandwidth-hungry stays on-pod).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run under launch/dryrun.py (sets "
+            "--xla_force_host_platform_device_count=512)")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def batch_axes_of(mesh: jax.sharding.Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests/examples)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))

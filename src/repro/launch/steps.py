@@ -1,0 +1,219 @@
+"""Distributed step functions + abstract input specs for every
+(architecture × input shape) combination.
+
+Three lowered entry points, matching the assigned input shapes:
+
+* ``train_step``   (train_4k)     — loss/backward/AdamW, remat, ZeRO-1
+* ``prefill_step`` (prefill_32k)  — full-sequence prefill returning the
+  last-token logits and the KV caches / SSM states, with an aLoRA
+  adapter + per-token adapter indices in the graph (the paper's
+  activation-aware masking lowers with the model)
+* ``decode_step``  (decode_32k, long_500k) — one token against a dense
+  KV cache (ring-buffer for sliding-window archs), aLoRA included
+
+``input_specs`` returns ShapeDtypeStructs only — nothing here allocates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.core.alora import PAPER_ALORA_RANK, adapter_param_specs
+from repro.distributed import sharding as sh
+from repro.launch.mesh import batch_axes_of
+from repro.models import model as M
+from repro.models.model import Runtime
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import (TrainState, init_train_state,
+                                       make_train_step)
+
+LONG_CONTEXT_WINDOW = 8192
+N_ADAPTERS = 1          # adapters stacked into the lowered graph
+
+
+def make_runtime(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                 **overrides) -> Runtime:
+    # long_500k must be sub-quadratic/cache-bounded: pure-SSM archs are
+    # natively so; archs with a model-card window (starcoder2) keep it;
+    # all other attention layers get the sliding-window variant
+    # (DESIGN.md §4).
+    window = 0
+    if shape.name == "long_500k" and cfg.arch_type != "ssm" \
+            and not cfg.sliding_window:
+        window = LONG_CONTEXT_WINDOW
+    kw = dict(
+        moe_impl="expert_parallel" if cfg.moe is not None else
+        "masked_dense",
+        mesh=mesh,
+        batch_axes=batch_axes_of(mesh),
+        model_axis="model",
+        remat=(shape.mode == "train"),
+        shard_activations=True,
+        window_override=window,
+        q_block=512,
+        kv_block=1024,
+    )
+    kw.update(overrides)
+    return Runtime(**kw)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                rt: Runtime) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if shape.mode == "train":
+        out["batch"] = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.float32),
+        }
+        if cfg.frontend == "vision":
+            out["batch"]["extra_embeds"] = _sds((B, cfg.num_patches,
+                                                 cfg.d_model), dt)
+        elif cfg.frontend == "audio":
+            out["batch"]["extra_embeds"] = _sds((B, cfg.encoder_seq_len,
+                                                 cfg.d_model), dt)
+        return out
+    if shape.mode == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["adapter_idx"] = _sds((B, S), jnp.int32)
+        if cfg.frontend == "vision":
+            out["extra_embeds"] = _sds((B, cfg.num_patches, cfg.d_model),
+                                       dt)
+        elif cfg.frontend == "audio":
+            out["extra_embeds"] = _sds((B, cfg.encoder_seq_len,
+                                        cfg.d_model), dt)
+        return out
+    # decode: one token against an S-token cache
+    out["token"] = _sds((B, 1), jnp.int32)
+    out["adapter_idx"] = _sds((B, 1), jnp.int32)
+    out["cache_len"] = _sds((), jnp.int32)
+    out["caches"] = jax.eval_shape(
+        lambda: M.init_decode_caches(cfg, B, S, rt))
+    return out
+
+
+def adapter_specs(cfg: ModelConfig):
+    return adapter_param_specs(cfg, PAPER_ALORA_RANK, N_ADAPTERS)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_prefill_fn(cfg: ModelConfig, rt: Runtime):
+    def prefill_step(params, adapters, tokens, adapter_idx,
+                     extra_embeds=None):
+        hidden, _, caches = M.forward_full(
+            params, cfg, tokens, rt, adapters=adapters,
+            adapter_idx=adapter_idx, extra_embeds=extra_embeds,
+            return_caches=True)
+        logits = M.logits_for(params, cfg, hidden[:, -1:])
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig, rt: Runtime):
+    def decode_fn(params, adapters, token, caches, cache_len, adapter_idx):
+        return M.decode_step(params, cfg, token, caches, cache_len, rt,
+                             adapters=adapters, adapter_idx=adapter_idx)
+    return decode_fn
+
+
+def make_train_fn(cfg: ModelConfig, rt: Runtime,
+                  ocfg: AdamWConfig = AdamWConfig()):
+    return make_train_step(cfg, ocfg, rt)
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+@dataclass
+class LoweredSpec:
+    fn: Any
+    args: tuple              # ShapeDtypeStructs (jit-able)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               rt: Optional[Runtime] = None,
+               zero1: bool = True) -> LoweredSpec:
+    """Assemble (fn, abstract args, shardings) for one (arch × shape)."""
+    rt = rt or make_runtime(cfg, mesh, shape)
+    b_axes = rt.batch_axes
+    params_shape = M.param_specs(cfg)
+    if rt.context_parallel:
+        assert cfg.arch_type in ("dense",), \
+            "context-parallel prefill is implemented for dense archs"
+        pspecs = sh.fsdp_param_specs_tree(cfg, params_shape, mesh)
+    else:
+        pspecs = sh.param_specs_tree(cfg, params_shape)
+    ins = input_specs(cfg, shape, rt)
+
+    if shape.mode == "train":
+        fn = make_train_fn(cfg, rt)
+        state_shape = jax.eval_shape(init_train_state, params_shape)
+        mu_specs = sh.param_specs_tree(cfg, state_shape.opt.mu)
+        nu_specs = sh.param_specs_tree(cfg, state_shape.opt.nu)
+        if zero1:
+            mu_specs = sh.zero1_specs(mu_specs, state_shape.opt.mu, mesh)
+            nu_specs = sh.zero1_specs(nu_specs, state_shape.opt.nu, mesh)
+        state_specs = TrainState(
+            params=pspecs,
+            opt=type(state_shape.opt)(step=P(), mu=mu_specs, nu=nu_specs))
+        bspecs = {k: sh.batch_specs(b_axes)[k] for k in ins["batch"]}
+        args = (state_shape, ins["batch"])
+        in_sh = (sh.to_named(state_specs, mesh), sh.to_named(bspecs, mesh))
+        return LoweredSpec(fn, args, in_sh,
+                           (sh.to_named(state_specs, mesh), None),
+                           donate_argnums=(0,))
+
+    ad_shape = adapter_specs(cfg)
+    ad_specs = sh.adapter_specs_tree(cfg, ad_shape)
+    if shape.mode == "prefill":
+        fn = make_prefill_fn(cfg, rt)
+        args = [params_shape, ad_shape, ins["tokens"], ins["adapter_idx"]]
+        in_specs = [pspecs, ad_specs, P(b_axes, None), P(b_axes, None)]
+        if "extra_embeds" in ins:
+            args.append(ins["extra_embeds"])
+            in_specs.append(P(b_axes, None, None))
+        caches_shape = jax.eval_shape(fn, *args)[1]
+        cache_sp = sh.cache_specs_tree(cfg, caches_shape, mesh, b_axes)
+        logits_sp = P(b_axes, None, "model")
+        return LoweredSpec(fn, tuple(args),
+                           tuple(sh.to_named(s, mesh) for s in in_specs),
+                           (sh.to_named(logits_sp, mesh),
+                            sh.to_named(cache_sp, mesh)))
+
+    # decode
+    fn = make_decode_fn(cfg, rt)
+    caches_shape = ins["caches"]
+    bsh = shape.global_batch > 1
+    cache_sp = sh.cache_specs_tree(cfg, caches_shape, mesh, b_axes,
+                                   batch_shardable=bsh)
+    tok_sp = P(b_axes, None) if bsh else P(None, None)
+    args = (params_shape, ad_shape, ins["token"], caches_shape,
+            ins["cache_len"], ins["adapter_idx"])
+    in_specs = (pspecs, ad_specs, tok_sp, cache_sp, P(), tok_sp)
+    logits_sp = P(b_axes, None, "model") if bsh else P(None, None, "model")
+    return LoweredSpec(fn, args,
+                       tuple(sh.to_named(s, mesh) for s in in_specs),
+                       (sh.to_named(logits_sp, mesh),
+                        sh.to_named(cache_sp, mesh)),
+                       donate_argnums=(3,))

@@ -1,0 +1,13 @@
+"""Model zoo: config-driven architectures (dense / MoE / SSM / hybrid /
+encoder-decoder / VLM) with shared functional sublayers."""
+from repro.models.model import (  # noqa: F401
+    Runtime,
+    decode_step,
+    forward_full,
+    init_decode_caches,
+    init_params,
+    iter_layers,
+    logits_for,
+    param_specs,
+    period_segments,
+)

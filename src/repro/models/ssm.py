@@ -1,0 +1,275 @@
+"""Mamba2 (SSD — state-space duality) blocks.  [arXiv:2405.21060]
+
+Chunked SSD forward for train/prefill (quadratic within a chunk, linear
+across chunks via a ``lax.scan`` recurrence on the (nh, N, P) state) and a
+constant-time single-token decode step.
+
+The chunked scan is the TPU adaptation of the paper's GPU kernel: each
+chunk's intra-block computation is an MXU-friendly batch of small matmuls
+(Q×Q and Q×N×P einsums); the inter-chunk recurrence is a scan carrying the
+state — which is also exactly the quantity our serving engine snapshots
+for the beyond-paper cross-model *state* reuse (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.ngroups * s.state_dim
+    return d_inner, nheads, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2 * cfg.num_layers)
+    in_dim = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[3], (nheads,))
+                 * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch))
+                   * std).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)
+                         ).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d))
+                     * out_std).astype(dtype),
+    }
+
+
+def _causal_conv(xBC: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                 conv_state: Optional[jax.Array]):
+    """Depthwise causal conv along seq.  xBC: (B, S, C); conv_w: (W, C).
+
+    Returns (activated output (B,S,C), new conv_state (B, W-1, C)).
+    """
+    B, S, C = xBC.shape
+    W = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), xBC.dtype)
+    full = jnp.concatenate([conv_state, xBC], axis=1)      # (B, W-1+S, C)
+    # sum_{w} full[:, t + w, :] * conv_w[w]  ->  out[:, t, :]
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for w in range(W):                                     # W is tiny (4)
+        out = out + full[:, w:w + S, :].astype(jnp.float32) * conv_w[w].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    out = jax.nn.silu(out).astype(xBC.dtype)
+    new_state = full[:, S:, :] if S >= W - 1 else full[:, -(W - 1):, :]
+    new_state = full[:, -(W - 1):, :]
+    return out, new_state
+
+
+def _rmsnorm_gated(y: jax.Array, z: jax.Array, w: jax.Array,
+                   eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+
+
+def ssd_forward(p: Params, cfg: ModelConfig, x: jax.Array,
+                ssm_state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None,
+                alora: Optional[Params] = None,
+                adapter_idx: Optional[jax.Array] = None,
+                valid_len=None,
+                return_boundary_states: bool = False):
+    """Chunked SSD over a full sequence.
+
+    x: (B, S, d_model).  Returns (y (B,S,d_model),
+    ssm_state (B, nh, N, P) fp32, conv_state (B, W-1, conv_ch)).
+
+    ``alora`` ({"a": (n,d,r), "b": (n,r,in_dim)}) applies the paper's
+    activation-aware masked low-rank update to ``in_proj`` — the SSM
+    analogue of adapting the QKV projections: pre-activation tokens
+    (adapter index 0) produce *identical* recurrent state to the base
+    model, which is what makes the beyond-paper SSM state-snapshot reuse
+    sound (DESIGN.md §2).
+
+    ``valid_len`` (scalar): tokens at/after this index are padding — their
+    dt is forced to 0 (decay=1, input=0 ⇒ state frozen) and the returned
+    conv state is the raw-input window ending at ``valid_len``.
+
+    ``return_boundary_states``: additionally return the SSM state and the
+    conv-window state at every chunk boundary — the quantities the
+    serving engine snapshots for cross-model state reuse.  With
+    ``chunk_size == engine block_size`` the boundaries are exactly the
+    KV-block boundaries.
+    """
+    s = cfg.ssm
+    B, S, _ = x.shape
+    d_inner, nh, conv_ch = ssm_dims(cfg)
+    G, N, P = s.ngroups, s.state_dim, s.head_dim
+    hpg = nh // G                                          # heads per group
+    Q = min(s.chunk_size, S)
+
+    zxbcdt = x @ p["in_proj"]
+    if alora is not None:
+        from repro.models.layers import lora_delta
+        zxbcdt = zxbcdt + lora_delta(x, alora["a"], alora["b"], adapter_idx)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]                   # (B,S,nh)
+
+    seq_valid = None
+    if valid_len is not None:
+        seq_valid = (jnp.arange(S) < valid_len)            # (S,)
+        xBC = xBC * seq_valid[None, :, None].astype(xBC.dtype)
+
+    if conv_state is None:
+        conv_state = jnp.zeros((B, s.conv_width - 1, conv_ch), xBC.dtype)
+    full_raw = jnp.concatenate([conv_state, xBC], axis=1)  # (B, W-1+S, ch)
+
+    xBC, new_conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                       conv_state)
+    if valid_len is not None:
+        # conv window ending exactly at valid_len
+        new_conv_state = jax.lax.dynamic_slice(
+            full_raw, (0, jnp.asarray(valid_len, jnp.int32), 0),
+            (B, s.conv_width - 1, conv_ch))
+    xs = xBC[..., :d_inner].reshape(B, S, nh, P).astype(jnp.float32)
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bm, hpg, axis=2).astype(jnp.float32)   # (B,S,nh,N)
+    Ch = jnp.repeat(Cm, hpg, axis=2).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    if seq_valid is not None:
+        dt = dt * seq_valid[None, :, None]                 # freeze padding
+    A = -jnp.exp(p["A_log"])                               # (nh,)
+    dA = dt * A                                            # (B,S,nh) <= 0
+
+    # ---- chunking ----------------------------------------------------------
+    pad = (-S) % Q
+    if pad:
+        z_pad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                  [(0, 0)] * (t.ndim - 2))
+        xs, Bh, Ch, dA, dt = map(z_pad, (xs, Bh, Ch, dA, dt))
+    Sp = S + pad
+    nc = Sp // Q
+    csh = lambda t: t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+    xs_c, Bh_c, Ch_c, dA_c, dt_c = map(csh, (xs, Bh, Ch, dA, dt))
+    # shapes: xs_c (nc,B,Q,nh,P), Bh_c/Ch_c (nc,B,Q,nh,N), dA_c (nc,B,Q,nh)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, nh, N, P), jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, Bc, Cc, dAc, dtc = inp
+        csum = jnp.cumsum(dAc, axis=1)                     # (B,Q,nh)
+        total = csum[:, -1]                                # (B,nh)
+        # intra-chunk (diagonal blocks):
+        # L[q,k] = exp(csum_q - csum_k) for q >= k
+        diff = csum[:, :, None, :] - csum[:, None, :, :]   # (B,Q,Q,nh)
+        qidx = jnp.arange(Q)
+        tri = (qidx[:, None] >= qidx[None, :])
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bqhn,bkhn->bqkh", Cc, Bc)
+        W = CB * L * dtc[:, None, :, :]                    # weight (B,Q,Q,nh)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", W, xc)
+        # inter-chunk: contribution of incoming state
+        y_off = jnp.einsum("bqhn,bhnp->bqhp", Cc * jnp.exp(csum)[..., None],
+                           state)
+        # state update for next chunk
+        decay_to_end = jnp.exp(total[:, None, :] - csum)   # (B,Q,nh)
+        chunk_state = jnp.einsum("bkhn,bkhp->bhnp",
+                                 Bc * (dtc * decay_to_end)[..., None], xc)
+        new_state = jnp.exp(total)[..., None, None] * state + chunk_state
+        return new_state, (y_diag + y_off,
+                           new_state if return_boundary_states else 0)
+
+    final_state, (ys, boundary_ssm) = jax.lax.scan(
+        chunk_step, ssm_state, (xs_c, Bh_c, Ch_c, dA_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, nh, P)[:, :S]
+    y = y + p["D"][:, None] * xs[:, :S]
+    y = y.reshape(B, S, d_inner)
+    y = _rmsnorm_gated(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    if not return_boundary_states:
+        return out, final_state, new_conv_state
+    # conv raw-input window ending at each chunk boundary e=(c+1)Q:
+    # full_raw[:, e : e + W-1]  (full_raw starts W-1 before token 0)
+    W = s.conv_width
+    ends = jnp.minimum((jnp.arange(nc) + 1) * Q, S)        # clamp padding
+    idx = ends[:, None] + jnp.arange(W - 1)[None, :]       # (nc, W-1)
+    boundary_conv = full_raw[:, idx]                       # (B, nc, W-1, ch)
+    boundary_conv = boundary_conv.swapaxes(0, 1)           # (nc, B, W-1, ch)
+    return out, final_state, new_conv_state, \
+        (boundary_ssm, boundary_conv)
+
+
+def ssd_decode_step(p: Params, cfg: ModelConfig, x: jax.Array,
+                    ssm_state: jax.Array, conv_state: jax.Array,
+                    alora: Optional[Params] = None,
+                    adapter_idx: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrence.  x: (B, 1, d_model)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    d_inner, nh, conv_ch = ssm_dims(cfg)
+    G, N, P = s.ngroups, s.state_dim, s.head_dim
+    hpg = nh // G
+    W = s.conv_width
+
+    zxbcdt = x[:, 0] @ p["in_proj"]                        # (B, in_dim)
+    if alora is not None:
+        from repro.models.layers import lora_delta
+        idx = adapter_idx[:, 0] if adapter_idx.ndim == 2 else adapter_idx
+        zxbcdt = zxbcdt + lora_delta(x[:, 0], alora["a"], alora["b"], idx)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+
+    # conv ring: window = [conv_state, xBC]
+    full = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) \
+        + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = full[:, 1:, :]
+
+    xt = conv_out[..., :d_inner].reshape(B, nh, P)
+    Bt = conv_out[..., d_inner:d_inner + G * N].reshape(B, G, N)
+    Ct = conv_out[..., d_inner + G * N:].reshape(B, G, N)
+    Bt = jnp.repeat(Bt, hpg, axis=1)                       # (B,nh,N)
+    Ct = jnp.repeat(Ct, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    dA = jnp.exp(dt * (-jnp.exp(p["A_log"])))              # (B,nh)
+
+    new_state = dA[..., None, None] * ssm_state + \
+        jnp.einsum("bhn,bhp->bhnp", Bt * dt[..., None], xt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ct, new_state) + p["D"][:, None] * xt
+    y = y.reshape(B, d_inner)
+    y = _rmsnorm_gated(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    return out[:, None, :], new_state, new_conv_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, nh, conv_ch = ssm_dims(cfg)
+    return (jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+            jnp.zeros((batch, s.conv_width - 1, conv_ch),
+                      jnp.dtype(cfg.dtype)))

@@ -1,0 +1,6 @@
+"""Serving engine: paged KV cache + cross-model prefix reuse + aLoRA."""
+from repro.serving.engine import Engine, EngineConfig  # noqa: F401
+from repro.serving.metrics import (aggregate, MetricsAggregate,  # noqa: F401
+                                   speedup_table)
+from repro.serving.request import Request, State  # noqa: F401
+from repro.serving.runner import ModelRunner, RunnerConfig  # noqa: F401

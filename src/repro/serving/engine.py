@@ -1,0 +1,463 @@
+"""The serving engine: scheduler + continuous batching + chunked prefill +
+cross-model prefix caching (the paper's system, §3).
+
+Request flow (paper Fig. 5):
+
+  submit → [queue] → admission (prefix-cache match: base-aligned block
+  hashes + SSM state snapshots) → chunked prefill (budgeted per step,
+  interleaved with decodes) → decode (continuous batching) → done
+
+The engine runs a discrete-event loop with a **virtual clock**: arrivals
+follow the benchmark-provided schedule; each ``step()`` executes real
+jitted model work and advances the clock by its measured wall time.  This
+reproduces queue-buildup dynamics (paper §4.2.1/4.3) honestly on CPU with
+reduced-scale models — the code path is identical to a real deployment,
+only the device differs.
+
+Cross-model reuse appears in two places:
+
+* admission calls ``PrefixCache.match_and_acquire`` with the request's
+  ``AdapterKey`` — aLoRA requests transparently hit blocks prefilled by
+  the base model or sibling adapters (and vice versa);
+* every block filled — during prefill OR decode (generated tokens are
+  cached too, paper §4.4) — is registered under its base-aligned hash.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.activation_mask import (adapter_index_for_positions,
+                                        find_invocation_start)
+from repro.core.alora import AdapterSpec, stack_adapters
+from repro.core.block_hash import request_block_hashes
+from repro.core.kv_manager import BlockManager, OutOfBlocks
+from repro.core.prefix_cache import PrefixCache
+from repro.models.model import Runtime, period_segments
+from repro.serving.metrics import MetricsAggregate, aggregate
+from repro.serving.request import Request, State
+from repro.serving.runner import ModelRunner, RunnerConfig
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    block_size: int = 16
+    num_blocks: int = 512
+    max_running: int = 8
+    num_state_slots: int = 64
+    max_batched_tokens: int = 128     # chunked-prefill budget per step
+    enable_prefix_cache: bool = True
+    # execution-time model: clock advances by measured wall time of each
+    # step, scaled by this factor (1.0 = honest CPU timing)
+    time_scale: float = 1.0
+
+
+@dataclass
+class RegisteredAdapter:
+    spec: AdapterSpec
+    slot: int
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 adapters: Optional[List[Tuple[AdapterSpec, dict]]] = None,
+                 rt: Runtime = Runtime()):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.rt = rt
+        adapters = adapters or []
+        self.adapters: Dict[str, RegisteredAdapter] = {}
+        weights = []
+        for i, (spec, w) in enumerate(adapters):
+            self.adapters[spec.name] = RegisteredAdapter(spec, i + 1)
+            weights.append(w)
+        if weights:
+            ranks = {spec.rank for spec, _ in adapters}
+            assert len(ranks) == 1, "engine stacks equal-rank adapters"
+            stacked = stack_adapters(cfg, weights, ranks.pop())
+        else:
+            stacked = None
+
+        rcfg = RunnerConfig(
+            block_size=engine_cfg.block_size,
+            num_blocks=engine_cfg.num_blocks + 1,
+            max_running=engine_cfg.max_running + 1,
+            num_state_slots=engine_cfg.num_state_slots + 1,
+        )
+        self.runner = ModelRunner(cfg, params, rcfg, stacked, rt)
+
+        has_attn = self.runner.La > 0
+        has_ssm = self.runner.Ls > 0
+        kv_mgr = BlockManager(engine_cfg.num_blocks,
+                              engine_cfg.block_size) if has_attn else None
+        st_mgr = BlockManager(engine_cfg.num_state_slots,
+                              engine_cfg.block_size) if has_ssm else None
+        self.kv_mgr = kv_mgr
+        self.st_mgr = st_mgr
+        self.cache = PrefixCache(block_size=engine_cfg.block_size,
+                                 kv_manager=kv_mgr, state_manager=st_mgr) \
+            if engine_cfg.enable_prefix_cache else None
+
+        self.clock = 0.0
+        self._next_id = 0
+        self.pending: List[Request] = []      # future arrivals (sorted)
+        self.waiting: List[Request] = []      # arrived, not yet admitted
+        self.running: List[Request] = []      # prefill/decode in flight
+        self.done: List[Request] = []
+        self._free_slots = list(range(engine_cfg.max_running))
+        self._xkv: Dict[int, tuple] = {}      # req_id -> encoder KV
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               adapter_name: Optional[str] = None,
+               arrival_time: Optional[float] = None,
+               prefix_embeds: Optional[np.ndarray] = None,
+               frame_embeds: Optional[np.ndarray] = None,
+               salt: Tuple = ()) -> int:
+        req = Request(
+            req_id=self._next_id,
+            prompt=list(map(int, prompt)),
+            max_new_tokens=max_new_tokens,
+            arrival_time=self.clock if arrival_time is None
+            else arrival_time,
+            prefix_embeds=prefix_embeds,
+            frame_embeds=frame_embeds,
+            salt=salt,
+        )
+        self._next_id += 1
+        if adapter_name is not None:
+            ra = self.adapters[adapter_name]
+            req.adapter = ra.spec
+            req.adapter_slot = ra.slot
+            if ra.spec.kind == "alora":
+                inv = find_invocation_start(req.prompt,
+                                            ra.spec.invocation_tokens)
+                # invocation sequence absent -> activate at end of prompt
+                req.inv_start = len(req.prompt) if inv is None else inv
+        if req.arrival_time <= self.clock:
+            self.waiting.append(req)
+        else:
+            self.pending.append(req)
+            self.pending.sort(key=lambda r: r.arrival_time)
+        return req.req_id
+
+    # ------------------------------------------------------------------
+    # admission: prefix-cache match + block allocation
+    # ------------------------------------------------------------------
+    def _try_admit(self, req: Request) -> bool:
+        ecfg = self.ecfg
+        bs = ecfg.block_size
+        n_prompt = len(req.prompt)
+        needs_slot = self.runner.Ls > 0
+        if needs_slot and not self._free_slots:
+            return False
+
+        # prefix-cache match.  We match against prompt[:-1]: the last
+        # prompt token must always be recomputed to produce first-token
+        # logits, so the reuse boundary (KV blocks AND the SSM state
+        # snapshot, which must sit at the SAME boundary) never covers it.
+        n_reuse, kv_blocks, state_slot = 0, [], None
+        req.hashes = request_block_hashes(req.prompt, bs,
+                                          req.adapter_key(), req.salt)
+        if self.cache is not None:
+            m = self.cache.match_and_acquire(req.prompt[:-1],
+                                             req.adapter_key(), req.salt)
+            n_reuse, kv_blocks, state_slot = (m.n_tokens, m.kv_blocks,
+                                              m.state_slot)
+
+        # allocate blocks for the uncached remainder of the prompt
+        n_total_blocks = (n_prompt + bs - 1) // bs
+        n_new = n_total_blocks - len(kv_blocks)
+        mgr = self.kv_mgr
+        if mgr is not None:
+            if mgr.num_free() < n_new:
+                for bid in kv_blocks:
+                    mgr.release(bid)
+                if state_slot is not None:
+                    self.st_mgr.release(state_slot)
+                return False
+            try:
+                new_blocks = [mgr.allocate() for _ in range(n_new)]
+            except OutOfBlocks:
+                return False
+            req.block_ids = kv_blocks + new_blocks
+        req.n_computed = n_reuse
+        req.n_cache_hit_tokens = n_reuse
+        if needs_slot:
+            req.run_slot = self._free_slots.pop()
+            if state_slot is not None:
+                self.runner.restore_state(state_slot, req.run_slot)
+                req.state_reused = True
+                self.st_mgr.release(state_slot)   # copied into live state
+            else:
+                self.runner.reset_live(req.run_slot)
+
+        # embeddings + (whisper) encoder KV
+        req.input_embeds = self.runner.build_input_embeds(
+            req.prompt, req.prefix_embeds)
+        if self.cfg.is_encoder_decoder:
+            assert req.frame_embeds is not None
+            self._xkv[req.req_id] = self.runner.encode(req.frame_embeds)
+
+        req.state = State.PREFILL
+        self.running.append(req)
+        return True
+
+    # ------------------------------------------------------------------
+    # one scheduler step
+    # ------------------------------------------------------------------
+    def step(self) -> float:
+        """Run one engine iteration; returns the step's execution time."""
+        # move due arrivals into the waiting queue
+        while self.pending and self.pending[0].arrival_time <= self.clock:
+            self.waiting.append(self.pending.pop(0))
+        # idle: jump to the next arrival
+        if not self.waiting and not self.running:
+            if self.pending:
+                self.clock = self.pending[0].arrival_time
+                return 0.0
+            return 0.0
+
+        t_before = self.clock
+        # decode first: running requests claim their next block BEFORE
+        # admission can hand freed blocks to new/preempted requests —
+        # this (plus recompute-preemption below) guarantees progress
+        # under block starvation (vLLM's decode-priority scheduling)
+        n_decode = self._run_decodes()
+
+        # admit FCFS while capacity allows
+        while self.waiting and len(self.running) < self.ecfg.max_running:
+            if not self._try_admit(self.waiting[0]):
+                break
+            self.waiting.pop(0)
+
+        budget = self.ecfg.max_batched_tokens - n_decode
+        n_prefill = self._run_prefills(max(budget, self.ecfg.block_size))
+        self._finish_requests()
+        # block starvation with zero progress: preempt the most recent
+        # running request (vLLM recompute-preemption) so the others can
+        # allocate; it re-enters the queue and re-prefills via the
+        # prefix cache
+        if n_decode == 0 and n_prefill == 0 and self.running:
+            self._preempt(self.running[-1])
+        return self.clock - t_before
+
+    # ------------------------------------------------------------------
+    def _preempt(self, r: Request) -> None:
+        if self.kv_mgr is not None and r.block_ids:
+            self.kv_mgr.release_all(r.block_ids)
+        r.block_ids = []
+        if r.run_slot >= 0:
+            self._free_slots.append(r.run_slot)
+            r.run_slot = -1
+        r.n_computed = 0
+        r.state_reused = False
+        r.state = State.QUEUED
+        self.running.remove(r)
+        self.waiting.insert(0, r)
+        self.preemptions = getattr(self, "preemptions", 0) + 1
+        if self.preemptions > 1000:
+            raise RuntimeError("preemption livelock: pool too small for "
+                               "a single request")
+
+    # ------------------------------------------------------------------
+    def _run_decodes(self) -> int:
+        decodes = [r for r in self.running if r.state == State.DECODE]
+        if not decodes:
+            return 0
+        bs = self.ecfg.block_size
+        # ensure each request has a block for the position it writes
+        ok: List[Request] = []
+        for r in decodes:
+            pos = r.n_computed
+            if self.kv_mgr is not None:
+                while len(r.block_ids) <= pos // bs:
+                    try:
+                        r.block_ids.append(self.kv_mgr.allocate())
+                    except OutOfBlocks:
+                        break
+                if len(r.block_ids) <= pos // bs:
+                    continue                        # starved; retry later
+            ok.append(r)
+        if not ok:
+            return 0
+        tokens = np.array([r.all_tokens[r.n_computed] for r in ok],
+                          np.int32)
+        positions = np.array([r.n_computed for r in ok], np.int32)
+        lengths = positions + 1
+        adapter_idx = np.array([
+            adapter_index_for_positions(
+                np.array([r.n_computed]), r.adapter_slot,
+                r.adapter.kind if r.adapter else None, r.inv_start)[0]
+            for r in ok], np.int32)
+        run_slots = np.array([max(r.run_slot, 0) for r in ok], np.int32)
+        block_tables = [r.block_ids for r in ok]
+        xkv_list = None
+        if self.cfg.is_encoder_decoder:
+            xkv_list = [self._xkv[r.req_id] for r in ok]
+        t0 = time.perf_counter()
+        logits = self.runner.decode_batch(
+            tokens=tokens, positions=positions, block_tables=block_tables,
+            lengths=lengths, adapter_idx=adapter_idx, run_slots=run_slots,
+            xkv_list=xkv_list)
+        logits = np.asarray(logits)               # sync
+        self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
+        nxt = np.argmax(logits, axis=-1)
+        for r, t in zip(ok, nxt):
+            r.n_computed += 1
+            self._on_block_boundary(r)
+            # append only when at the sampling frontier (after a
+            # preemption the decode path RECOMPUTES known tokens first)
+            if r.n_computed == len(r.all_tokens) and not r.is_finished():
+                r.output_tokens.append(int(t))
+        return len(ok)
+
+    # ------------------------------------------------------------------
+    def _run_prefills(self, budget: int) -> int:
+        bs = self.ecfg.block_size
+        n_done = 0
+        for r in self.running:
+            if budget <= 0:
+                break
+            if r.state != State.PREFILL:
+                continue
+            n_prompt = len(r.prompt)
+            lo = r.n_computed
+            hi = min(n_prompt, lo + min(budget,
+                                        self.runner.rcfg.chunk_tokens))
+            # keep chunk boundaries block-aligned except the final chunk
+            if hi < n_prompt:
+                hi = lo + ((hi - lo) // bs) * bs
+                if hi <= lo:
+                    continue
+            positions = np.arange(lo, hi)
+            aidx = adapter_index_for_positions(
+                positions, r.adapter_slot,
+                r.adapter.kind if r.adapter else None, r.inv_start)
+            if r.t_prefill_start is None:
+                r.t_prefill_start = self.clock
+            t0 = time.perf_counter()
+            logits, boundary = self.runner.prefill_chunk(
+                input_embeds=r.input_embeds, lo=lo, hi=hi,
+                block_ids=r.block_ids if self.kv_mgr is not None else [],
+                adapter_idx_row=aidx, run_slot=max(r.run_slot, 0),
+                xkv=self._xkv.get(r.req_id))
+            logits = np.asarray(logits)           # sync
+            self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
+            budget -= hi - lo
+            n_done += hi - lo
+            r.n_computed = hi
+            # register every block completed by this chunk (+ snapshots)
+            self._register_prefill_blocks(r, lo, hi, boundary)
+            if hi == n_prompt:                      # prefill complete
+                r.state = State.DECODE
+                if r.t_decode_start is None:
+                    r.t_decode_start = self.clock
+                if not r.output_tokens:             # not a re-prefill
+                    r.output_tokens.append(int(np.argmax(logits)))
+        return n_done
+
+    # ------------------------------------------------------------------
+    def _register_prefill_blocks(self, r: Request, lo: int, hi: int,
+                                 boundary) -> None:
+        if self.cache is None:
+            return
+        bs = self.ecfg.block_size
+        for b in range(lo // bs, hi // bs):
+            if (b + 1) * bs > hi:
+                break
+            h = r.hashes[b]
+            if self.kv_mgr is not None and b < len(r.block_ids):
+                self.cache.register_kv_block(h, r.block_ids[b])
+            if self.st_mgr is not None:
+                # boundary states are per chunk of size bs within [lo, hi)
+                c_idx = b - lo // bs
+                if self.st_mgr.lookup(h) is None:
+                    try:
+                        slot = self.st_mgr.allocate()
+                    except OutOfBlocks:
+                        continue
+                    self.runner.snapshot_boundary(boundary, c_idx, slot)
+                    self.cache.register_state(h, slot)
+                    self.st_mgr.release(slot)       # cached, not owned
+
+    # ------------------------------------------------------------------
+    def _on_block_boundary(self, r: Request) -> None:
+        """After computing token at position n_computed-1 during decode:
+        if it completed a block, hash + register it (generated tokens are
+        cached too — paper §4.4)."""
+        if self.cache is None:
+            return
+        bs = self.ecfg.block_size
+        pos = r.n_computed
+        if pos % bs != 0:
+            return
+        b = pos // bs - 1
+        toks = r.all_tokens
+        # extend the hash chain if needed
+        while len(r.hashes) <= b:
+            i = len(r.hashes)
+            hs = request_block_hashes(toks[:(i + 1) * bs], bs,
+                                      r.adapter_key(), r.salt)
+            r.hashes = hs
+        h = r.hashes[b]
+        if self.kv_mgr is not None and b < len(r.block_ids):
+            self.cache.register_kv_block(h, r.block_ids[b])
+        if self.st_mgr is not None and self.st_mgr.lookup(h) is None:
+            try:
+                slot = self.st_mgr.allocate()
+            except OutOfBlocks:
+                return
+            self.runner.snapshot_live(max(r.run_slot, 0), slot)
+            self.cache.register_state(h, slot)
+            self.st_mgr.release(slot)
+
+    # ------------------------------------------------------------------
+    def _finish_requests(self) -> None:
+        still = []
+        for r in self.running:
+            if r.state == State.DECODE and r.is_finished():
+                r.state = State.DONE
+                r.t_done = self.clock
+                if self.kv_mgr is not None:
+                    self.kv_mgr.release_all(r.block_ids)
+                if r.run_slot >= 0:
+                    self._free_slots.append(r.run_slot)
+                self._xkv.pop(r.req_id, None)
+                self.done.append(r)
+            else:
+                still.append(r)
+        self.running = still
+
+    # ------------------------------------------------------------------
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not (self.pending or self.waiting or self.running):
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")
+
+    # ------------------------------------------------------------------
+    def metrics_for(self, req_ids: Sequence[int]) -> MetricsAggregate:
+        ids = set(req_ids)
+        return aggregate([r.metrics() for r in self.done
+                          if r.req_id in ids])
+
+    def request(self, req_id: int) -> Request:
+        for pool in (self.done, self.running, self.waiting, self.pending):
+            for r in pool:
+                if r.req_id == req_id:
+                    return r
+        raise KeyError(req_id)
+
+    def kv_hit_rate(self) -> float:
+        mgr = self.kv_mgr or self.st_mgr
+        return mgr.hit_rate()

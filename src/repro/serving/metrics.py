@@ -1,0 +1,51 @@
+"""Serving metrics aggregation (paper Table 2), Prometheus-endpoint
+equivalent: the engine records per-request stage timings; this module
+aggregates them per pipeline stage for the benchmark tables."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+METRIC_KEYS = ("queue", "prefill", "decode", "ttft", "itl", "e2e",
+               "inference", "cache_hit_frac")
+
+
+@dataclass
+class MetricsAggregate:
+    n: int
+    means: Dict[str, float]
+    p50: Dict[str, float]
+    p99: Dict[str, float]
+    throughput_tok_per_s: float
+
+    def row(self, keys: Iterable[str] = METRIC_KEYS) -> Dict[str, float]:
+        return {k: self.means[k] for k in keys}
+
+
+def aggregate(metrics: List[dict]) -> MetricsAggregate:
+    if not metrics:
+        return MetricsAggregate(0, {}, {}, {}, 0.0)
+    means, p50, p99 = {}, {}, {}
+    for k in METRIC_KEYS:
+        vals = np.array([m[k] for m in metrics], dtype=np.float64)
+        means[k] = float(vals.mean())
+        p50[k] = float(np.percentile(vals, 50))
+        p99[k] = float(np.percentile(vals, 99))
+    total_tokens = sum(m["prompt_len"] + m["output_len"] for m in metrics)
+    total_e2e = sum(m["e2e"] for m in metrics)
+    return MetricsAggregate(
+        n=len(metrics), means=means, p50=p50, p99=p99,
+        throughput_tok_per_s=total_tokens / total_e2e if total_e2e else 0.0)
+
+
+def speedup_table(baseline: MetricsAggregate, ours: MetricsAggregate,
+                  keys: Iterable[str] = ("e2e", "ttft", "queue", "prefill",
+                                         "decode")) -> Dict[str, float]:
+    """Paper-style speedup factors (baseline=LoRA / ours=aLoRA)."""
+    out = {}
+    for k in keys:
+        b, o = baseline.means.get(k, 0.0), ours.means.get(k, 0.0)
+        out[k] = b / o if o > 0 else float("inf")
+    return out

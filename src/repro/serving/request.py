@@ -1,0 +1,100 @@
+"""Request lifecycle (paper Table 2 / Fig. 5).
+
+A request moves through queue → prefill → decode → done; the boundary
+timestamps define the paper's metrics:
+
+  queue time   = t_prefill_start - t_arrival
+  prefill time = t_decode_start  - t_prefill_start
+  decode time  = t_done          - t_decode_start
+  TTFT         = queue + prefill
+  ITL          = decode / (n_output - 1)
+  E2E          = queue + prefill + decode
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.alora import AdapterSpec
+from repro.core.block_hash import AdapterKey, BlockHash
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]                       # token ids used for hashing
+    max_new_tokens: int
+    adapter: Optional[AdapterSpec] = None
+    adapter_slot: int = 0                   # index into the engine's stack
+    arrival_time: float = 0.0
+    # multimodal stubs -------------------------------------------------------
+    prefix_embeds: Optional[np.ndarray] = None   # vlm: (P, d) patch embeds
+    frame_embeds: Optional[np.ndarray] = None    # audio: (Se, d) frames
+    salt: Tuple = ()                        # cache salt (content digest)
+    # lifecycle --------------------------------------------------------------
+    state: State = State.QUEUED
+    t_prefill_start: Optional[float] = None
+    t_decode_start: Optional[float] = None
+    t_done: Optional[float] = None
+    output_tokens: List[int] = field(default_factory=list)
+    # cache bookkeeping --------------------------------------------------------
+    inv_start: int = 0                      # activation point (aLoRA)
+    block_ids: List[int] = field(default_factory=list)
+    hashes: List[BlockHash] = field(default_factory=list)  # full-block chain
+    n_computed: int = 0                     # prompt tokens with KV in cache
+    n_cache_hit_tokens: int = 0             # reused via prefix cache
+    run_slot: int = -1                      # live-state slot (SSM archs)
+    state_reused: bool = False
+    # runner scratch -----------------------------------------------------------
+    input_embeds: Any = None                # (S, d) jax array, grows w/ decode
+
+    # -------------------------------------------------------------------------
+    @property
+    def seq_len(self) -> int:
+        return len(self.prompt) + len(self.output_tokens)
+
+    @property
+    def all_tokens(self) -> List[int]:
+        return self.prompt + self.output_tokens
+
+    def adapter_key(self) -> Optional[AdapterKey]:
+        if self.adapter is None:
+            return None
+        return AdapterKey(self.adapter.name, self.adapter.kind,
+                          self.inv_start)
+
+    def is_finished(self) -> bool:
+        return len(self.output_tokens) >= self.max_new_tokens
+
+    # -- metrics --------------------------------------------------------------
+    def metrics(self) -> dict:
+        assert self.state == State.DONE
+        queue = self.t_prefill_start - self.arrival_time
+        prefill = self.t_decode_start - self.t_prefill_start
+        decode = self.t_done - self.t_decode_start
+        n_out = max(len(self.output_tokens), 1)
+        return {
+            "req_id": self.req_id,
+            "queue": queue,
+            "prefill": prefill,
+            "decode": decode,
+            "ttft": queue + prefill,
+            "itl": decode / max(n_out - 1, 1),
+            "e2e": queue + prefill + decode,
+            "inference": prefill + decode,
+            "prompt_len": len(self.prompt),
+            "output_len": len(self.output_tokens),
+            "cache_hit_tokens": self.n_cache_hit_tokens,
+            "cache_hit_frac": self.n_cache_hit_tokens
+            / max(len(self.prompt), 1),
+        }

@@ -1,0 +1,423 @@
+"""Paged model runner — executes prefill chunks and decode batches for the
+serving engine against the paged KV pool / SSM state pools.
+
+This is the engine-side analogue of vLLM's GPU model runner (paper §3 +
+App. A/B): before each forward it assembles the aLoRA metadata (per-token
+adapter indices — the activation-aware mask) and block tables, then runs
+a jitted step.  The numerical sublayers are shared with the distributed
+step functions (``repro.models``); shapes are bucketed (powers of two) so
+jit caches a bounded set of traces.  The jitted step functions are
+module-level with a hashable static ``RunnerSpec`` so independent Engine
+instances over the same config share one compilation cache (the analogue
+of vLLM's CUDA-graph reuse across server restarts in a warm process).
+
+Pools:
+  k_pool/v_pool:     (La, NB, bs, KV, hd)   — last block id is a write
+                                              dump for padded slots
+  live_ssm/conv:     (Ls, MR, ...)          — per running-slot SSM state
+  snap_ssm/conv:     (Ls, NS, ...)          — block-boundary snapshots
+                                              (cross-model state reuse)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, SSM, ModelConfig
+from repro.kernels.ref import paged_attention_ref
+from repro.models import layers as Lyr
+from repro.models import model as M
+from repro.models import ssm as ssm_lib
+from repro.models.model import Runtime
+
+NEG_INF = -1e30
+
+
+def next_pow2(n: int, lo: int = 1) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
+
+
+@dataclass(frozen=True)
+class RunnerConfig:
+    block_size: int = 16
+    num_blocks: int = 512           # incl. 1 reserved dump block
+    max_running: int = 9            # incl. 1 reserved dump slot
+    num_state_slots: int = 65       # incl. 1 reserved dump slot
+    chunk_tokens: int = 64          # max prefill chunk (multiple of bs)
+
+
+@dataclass(frozen=True)
+class RunnerSpec:
+    """Hashable static context for the jitted step functions."""
+    cfg: ModelConfig
+    block_size: int
+    num_blocks: int
+    window: int
+    kinds: Tuple[str, ...]
+    rt: Runtime = Runtime()
+
+
+def _chunk_attention(q, past_k, past_v, past_len, new_k, new_v,
+                     start_pos, window: int):
+    """Prefill-chunk attention over [cached past || current chunk].
+
+    q/new_k/new_v: (1, C, H|KV, hd); past_k/past_v: (1, Sp, KV, hd);
+    past entries valid where index < past_len.  Absolute positions:
+    past j -> j, chunk i -> start_pos + i.
+    """
+    B, C, H, hd = q.shape
+    KV = new_k.shape[2]
+    G = H // KV
+    Sp = past_k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(B, C, KV, G, hd)
+
+    k_all = jnp.concatenate([past_k, new_k], axis=1)     # (1, Sp+C, KV, hd)
+    v_all = jnp.concatenate([past_v, new_v], axis=1)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qr, k_all,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = start_pos + jnp.arange(C, dtype=jnp.int32)    # (C,)
+    kpos = jnp.concatenate([jnp.arange(Sp, dtype=jnp.int32),
+                            start_pos + jnp.arange(C, dtype=jnp.int32)])
+    valid = jnp.concatenate([jnp.arange(Sp) < past_len,
+                             jnp.ones((C,), bool)])
+    mask = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", p, v_all.astype(jnp.float32))
+    return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (module level, static spec)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnums=0)
+def _prefill_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
+                  live_ssm, live_conv, x_chunk, valid_len, start_pos,
+                  block_table, adapter_idx, run_slot, xkv):
+    cfg, rt = spec.cfg, spec.rt
+    bs = spec.block_size
+    Cb = x_chunk.shape[1]
+    dump = spec.num_blocks - 1
+    x = x_chunk
+    positions = (start_pos + jnp.arange(Cb, dtype=jnp.int32))[None]  # (1,Cb)
+    gpos = positions[0]
+    i_valid = jnp.arange(Cb) < valid_len
+    nbb = block_table.shape[0]
+    bids = jnp.where(i_valid,
+                     block_table[jnp.clip(gpos // bs, 0, nbb - 1)], dump)
+    offs = gpos % bs
+    boundary_ssm, boundary_conv = [], []
+    ai = si = 0
+    layers_params = [lp for _, lp in M.iter_layers(params, cfg)]
+    for li, kind in enumerate(spec.kinds):
+        lp = layers_params[li]
+        al = adapter_layers[li]
+        if kind == SSM:
+            h = Lyr.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            st = live_ssm[si, run_slot][None]
+            cv = live_conv[si, run_slot][None]
+            y, st2, cv2, (bs_ssm, bs_conv) = ssm_lib.ssd_forward(
+                lp["ssm"], cfg, h, ssm_state=st, conv_state=cv,
+                alora=al, adapter_idx=adapter_idx,
+                valid_len=valid_len, return_boundary_states=True)
+            live_ssm = live_ssm.at[si, run_slot].set(st2[0])
+            live_conv = live_conv.at[si, run_slot].set(cv2[0])
+            boundary_ssm.append(bs_ssm[:, 0])          # (nc, nh, N, P)
+            boundary_conv.append(bs_conv[:, 0])
+            x = x + y
+            si += 1
+        else:
+            h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = Lyr.qkv_project(lp["attn"], cfg, h, al, adapter_idx)
+            q = Lyr.apply_rope(q, positions, cfg.rope_theta)
+            k = Lyr.apply_rope(k, positions, cfg.rope_theta)
+            past_k = k_pool[ai][block_table].reshape(
+                1, -1, cfg.num_kv_heads, cfg.head_dim)
+            past_v = v_pool[ai][block_table].reshape(
+                1, -1, cfg.num_kv_heads, cfg.head_dim)
+            o = _chunk_attention(q, past_k, past_v, start_pos,
+                                 k, v, start_pos, spec.window)
+            x = x + Lyr.out_project(lp["attn"], cfg, o)
+            k_pool = k_pool.at[ai, bids, offs].set(k[0])
+            v_pool = v_pool.at[ai, bids, offs].set(v[0])
+            if cfg.is_encoder_decoder:
+                x = M.cross_attn_sublayer(
+                    lp, cfg, x, xkv[0][ai][None], xkv[1][ai][None])
+            x, _ = M.mlp_sublayer(lp, cfg, rt, x)
+            ai += 1
+    x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last_h = jax.lax.dynamic_index_in_dim(
+        x[0], jnp.maximum(valid_len - 1, 0), axis=0, keepdims=False)
+    logits = M.logits_for(params, cfg, last_h)
+    b_ssm = jnp.stack(boundary_ssm) if boundary_ssm else 0
+    b_conv = jnp.stack(boundary_conv) if boundary_conv else 0
+    return (k_pool, v_pool, live_ssm, live_conv, b_ssm, b_conv, logits)
+
+
+@partial(jax.jit, static_argnums=0)
+def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
+                 live_ssm, live_conv, tokens, positions, block_tables,
+                 lengths, adapter_idx, run_slots, write_bids, write_offs,
+                 xkv):
+    cfg, rt = spec.cfg, spec.rt
+    x = params["embed"]["tok"][tokens][:, None, :]       # (Bb, 1, d)
+    pos2 = positions[:, None]                            # (Bb, 1)
+    aidx2 = adapter_idx[:, None]
+    ai = si = 0
+    layers_params = [lp for _, lp in M.iter_layers(params, cfg)]
+    for li, kind in enumerate(spec.kinds):
+        lp = layers_params[li]
+        al = adapter_layers[li]
+        if kind == SSM:
+            h = Lyr.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            st = live_ssm[si, run_slots]
+            cv = live_conv[si, run_slots]
+            y, st2, cv2 = ssm_lib.ssd_decode_step(
+                lp["ssm"], cfg, h, st, cv, alora=al, adapter_idx=aidx2)
+            live_ssm = live_ssm.at[si, run_slots].set(st2)
+            live_conv = live_conv.at[si, run_slots].set(cv2)
+            x = x + y
+            si += 1
+        else:
+            h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = Lyr.qkv_project(lp["attn"], cfg, h, al, aidx2)
+            q = Lyr.apply_rope(q, pos2, cfg.rope_theta)
+            k = Lyr.apply_rope(k, pos2, cfg.rope_theta)
+            k_pool = k_pool.at[ai, write_bids, write_offs].set(k[:, 0])
+            v_pool = v_pool.at[ai, write_bids, write_offs].set(v[:, 0])
+            o = paged_attention_ref(q[:, 0], k_pool[ai], v_pool[ai],
+                                    block_tables, lengths,
+                                    window=spec.window)
+            x = x + Lyr.out_project(lp["attn"], cfg, o[:, None])
+            if cfg.is_encoder_decoder:
+                x = M.cross_attn_sublayer(lp, cfg, x,
+                                          xkv[0][:, ai], xkv[1][:, ai])
+            x, _ = M.mlp_sublayer(lp, cfg, rt, x)
+            ai += 1
+    x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = M.logits_for(params, cfg, x[:, 0])
+    return k_pool, v_pool, live_ssm, live_conv, logits
+
+
+@partial(jax.jit, static_argnums=0)
+def _encode_impl(spec: RunnerSpec, params, frames):
+    cfg = spec.cfg
+    enc_out = M._run_encoder(params["encoder"], cfg, spec.rt, frames[None])
+    xks, xvs = [], []
+    layers_params = [lp for _, lp in M.iter_layers(params, cfg)]
+    for li, kind in enumerate(spec.kinds):
+        if kind != ATTN:
+            continue
+        lp = layers_params[li]
+        xk, xv = M.encoder_kv(lp, cfg, enc_out)
+        xks.append(xk[0])
+        xvs.append(xv[0])
+    return jnp.stack(xks), jnp.stack(xvs)                # (La, Se, KV, hd)
+
+
+# ---------------------------------------------------------------------------
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params, rcfg: RunnerConfig,
+                 stacked_adapters=None, rt: Runtime = Runtime()):
+        if cfg.ssm is not None and cfg.ssm.chunk_size != rcfg.block_size:
+            # align SSD chunk boundaries with KV-block boundaries so state
+            # snapshots land exactly on block-hash boundaries
+            import dataclasses as _dc
+            cfg = cfg.replace(ssm=_dc.replace(cfg.ssm,
+                                              chunk_size=rcfg.block_size))
+        self.cfg = cfg
+        self.rcfg = rcfg
+        self.rt = rt
+        self.params = params
+        self.kinds = [k for k, _ in M.iter_layers(params, cfg)]
+        self.attn_ids = [i for i, k in enumerate(self.kinds) if k == ATTN]
+        self.ssm_ids = [i for i, k in enumerate(self.kinds) if k == SSM]
+        self.La, self.Ls = len(self.attn_ids), len(self.ssm_ids)
+        self.window = M.effective_window(cfg, rt)
+        self._spec = RunnerSpec(cfg=cfg, block_size=rcfg.block_size,
+                                num_blocks=rcfg.num_blocks,
+                                window=self.window,
+                                kinds=tuple(self.kinds), rt=rt)
+
+        # per-layer adapter slices aligned with layer order
+        self.adapter_layers: List[Any] = []
+        if stacked_adapters is not None:
+            repeats, segs = M.period_segments(cfg)
+            for r in range(repeats):
+                for si, (kind, count) in enumerate(segs):
+                    seg = stacked_adapters[f"seg{si}"]
+                    for c in range(count):
+                        self.adapter_layers.append(
+                            jax.tree.map(lambda a: a[r, c], seg))
+        else:
+            self.adapter_layers = [None] * len(self.kinds)
+
+        dtype = Lyr.dtype_of(cfg)
+        bs, NB = rcfg.block_size, rcfg.num_blocks
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        self.k_pool = jnp.zeros((max(self.La, 1), NB, bs, KV, hd), dtype)
+        self.v_pool = jnp.zeros_like(self.k_pool)
+        if self.Ls:
+            s = cfg.ssm
+            d_inner, nh, ch = ssm_lib.ssm_dims(cfg)
+            MR, NS = rcfg.max_running, rcfg.num_state_slots
+            self.live_ssm = jnp.zeros((self.Ls, MR, nh, s.state_dim,
+                                       s.head_dim), jnp.float32)
+            self.live_conv = jnp.zeros((self.Ls, MR, s.conv_width - 1, ch),
+                                       dtype)
+            self.snap_ssm = jnp.zeros((self.Ls, NS, nh, s.state_dim,
+                                       s.head_dim), jnp.float32)
+            self.snap_conv = jnp.zeros((self.Ls, NS, s.conv_width - 1, ch),
+                                       dtype)
+        else:
+            self.live_ssm = self.live_conv = None
+            self.snap_ssm = self.snap_conv = None
+
+    # ------------------------------------------------------------------
+    # embeddings
+    # ------------------------------------------------------------------
+    def embed_tokens(self, tokens: np.ndarray) -> jax.Array:
+        return self.params["embed"]["tok"][jnp.asarray(tokens)]
+
+    def build_input_embeds(self, prompt: List[int],
+                           prefix_embeds: Optional[np.ndarray]) -> jax.Array:
+        emb = self.embed_tokens(np.asarray(prompt, np.int32))
+        if prefix_embeds is not None:
+            pe = jnp.asarray(prefix_embeds, emb.dtype)
+            # hashing pseudo-tokens already cover the patch prefix; the
+            # embeds replace the leading len(pe) rows
+            emb = jnp.concatenate([pe, emb[len(pe):]], axis=0) \
+                if len(prompt) >= pe.shape[0] else pe
+        return emb
+
+    # ------------------------------------------------------------------
+    # encoder (whisper)
+    # ------------------------------------------------------------------
+    def encode(self, frames: np.ndarray):
+        return _encode_impl(self._spec, self.params, jnp.asarray(frames))
+
+    # ------------------------------------------------------------------
+    # prefill chunk
+    # ------------------------------------------------------------------
+    def prefill_chunk(self, *, input_embeds, lo: int, hi: int,
+                      block_ids: List[int], adapter_idx_row: np.ndarray,
+                      run_slot: int, xkv=None):
+        """Execute prefill of tokens [lo, hi) of one request.
+
+        Returns (logits at token hi-1 (V,), boundary states).
+        The chunk is padded to a bucket; the block table to pow2.
+        """
+        rc = self.rcfg
+        C = hi - lo
+        Cb = next_pow2(C, lo=min(rc.block_size, rc.chunk_tokens))
+        x = jnp.zeros((1, Cb, self.cfg.d_model), input_embeds.dtype)
+        x = x.at[0, :C].set(input_embeds[lo:hi])
+        nbb = next_pow2(max(len(block_ids), 1))
+        bt = np.full((nbb,), rc.num_blocks - 1, np.int32)
+        bt[:len(block_ids)] = block_ids
+        aidx = np.zeros((1, Cb), np.int32)
+        aidx[0, :C] = adapter_idx_row
+        (self.k_pool, self.v_pool, live_ssm, live_conv, b_ssm, b_conv,
+         logits) = _prefill_impl(
+            self._spec, self.params, self.adapter_layers, self.k_pool,
+            self.v_pool, self.live_ssm, self.live_conv, x,
+            jnp.asarray(C, jnp.int32), jnp.asarray(lo, jnp.int32),
+            jnp.asarray(bt), jnp.asarray(aidx),
+            jnp.asarray(run_slot, jnp.int32), xkv)
+        if self.Ls:
+            self.live_ssm, self.live_conv = live_ssm, live_conv
+        return logits, (b_ssm, b_conv)
+
+    # ------------------------------------------------------------------
+    # decode batch
+    # ------------------------------------------------------------------
+    def decode_batch(self, *, tokens: np.ndarray, positions: np.ndarray,
+                     block_tables: List[List[int]], lengths: np.ndarray,
+                     adapter_idx: np.ndarray, run_slots: np.ndarray,
+                     xkv_list=None):
+        """One decode step for a batch of requests (host-padded).
+
+        Returns logits (B, V) for the real rows.
+        """
+        rc = self.rcfg
+        B = len(tokens)
+        Bb = next_pow2(B)
+        dump_block = rc.num_blocks - 1
+        dump_slot = rc.max_running - 1
+        nbb = next_pow2(max(max((len(t) for t in block_tables), default=1),
+                            1))
+        tok = np.zeros((Bb,), np.int32)
+        tok[:B] = tokens
+        pos = np.zeros((Bb,), np.int32)
+        pos[:B] = positions
+        bt = np.full((Bb, nbb), dump_block, np.int32)
+        for i, t in enumerate(block_tables):
+            bt[i, :len(t)] = t
+        ln = np.zeros((Bb,), np.int32)
+        ln[:B] = lengths
+        ad = np.zeros((Bb,), np.int32)
+        ad[:B] = adapter_idx
+        rs = np.full((Bb,), dump_slot, np.int32)
+        rs[:B] = run_slots
+        wb = np.full((Bb,), dump_block, np.int32)
+        wo = np.zeros((Bb,), np.int32)
+        for i in range(B):
+            p = positions[i]
+            if block_tables[i]:                # attn-free archs: no KV
+                wb[i] = block_tables[i][p // rc.block_size]
+                wo[i] = p % rc.block_size
+        xkv = None
+        if xkv_list is not None:
+            Se = xkv_list[0][0].shape[1]
+            KV, hd = self.cfg.num_kv_heads, self.cfg.head_dim
+            xk = jnp.zeros((Bb, self.La, Se, KV, hd), xkv_list[0][0].dtype)
+            xv = jnp.zeros_like(xk)
+            for i, (k_, v_) in enumerate(xkv_list):
+                xk = xk.at[i].set(k_)
+                xv = xv.at[i].set(v_)
+            xkv = (xk, xv)
+        (self.k_pool, self.v_pool, live_ssm, live_conv,
+         logits) = _decode_impl(
+            self._spec, self.params, self.adapter_layers, self.k_pool,
+            self.v_pool, self.live_ssm, self.live_conv, jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(bt), jnp.asarray(ln),
+            jnp.asarray(ad), jnp.asarray(rs), jnp.asarray(wb),
+            jnp.asarray(wo), xkv)
+        if self.Ls:
+            self.live_ssm, self.live_conv = live_ssm, live_conv
+        return np.asarray(logits[:B])
+
+    # ------------------------------------------------------------------
+    # SSM state snapshot / restore
+    # ------------------------------------------------------------------
+    def snapshot_boundary(self, boundary, c_idx: int, slot: int):
+        b_ssm, b_conv = boundary
+        self.snap_ssm = self.snap_ssm.at[:, slot].set(b_ssm[:, c_idx])
+        self.snap_conv = self.snap_conv.at[:, slot].set(b_conv[:, c_idx])
+
+    def snapshot_live(self, run_slot: int, slot: int):
+        self.snap_ssm = self.snap_ssm.at[:, slot].set(
+            self.live_ssm[:, run_slot])
+        self.snap_conv = self.snap_conv.at[:, slot].set(
+            self.live_conv[:, run_slot])
+
+    def restore_state(self, slot: int, run_slot: int):
+        self.live_ssm = self.live_ssm.at[:, run_slot].set(
+            self.snap_ssm[:, slot])
+        self.live_conv = self.live_conv.at[:, run_slot].set(
+            self.snap_conv[:, slot])
+
+    def reset_live(self, run_slot: int):
+        self.live_ssm = self.live_ssm.at[:, run_slot].set(0.0)
+        self.live_conv = self.live_conv.at[:, run_slot].set(0.0)

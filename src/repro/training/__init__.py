@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, data pipeline, train step, checkpoints."""
+from repro.training.checkpoint import (restore_checkpoint,  # noqa: F401
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticDataset  # noqa: F401
+from repro.training.optimizer import (AdamWConfig, AdamWState,  # noqa: F401
+                                      adamw_update, init_adamw, lr_at)
+from repro.training.train_loop import (TrainState,  # noqa: F401
+                                       chunked_ce_loss, init_train_state,
+                                       make_train_step)

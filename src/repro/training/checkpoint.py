@@ -1,0 +1,52 @@
+"""Checkpointing: flat-key .npz save/restore of arbitrary pytrees.
+
+Deliberately dependency-free (orbax is not available offline); the format
+is a single .npz whose keys encode the tree path, plus a tiny JSON
+manifest for structure validation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    with open(path + ".manifest.json", "w") as f:
+        json.dump({"step": step, "keys": sorted(flat)}, f)
+
+
+def restore_checkpoint(path: str, tree_like) -> Any:
+    """Restore into the structure of ``tree_like`` (shape-checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_spec = _flatten(jax.tree.map(np.asarray, tree_like))
+    out_leaves = []
+    paths, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(np.shape(leaf)), \
+            f"{key}: ckpt {arr.shape} vs model {np.shape(leaf)}"
+        out_leaves.append(arr)
+    return tdef.unflatten(out_leaves)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(path + ".manifest.json") as f:
+        return json.load(f)["step"]

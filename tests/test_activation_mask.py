@@ -1,0 +1,55 @@
+"""Activation-aware masking metadata (paper Alg. 1 / App. B)."""
+import numpy as np
+
+from repro.core.activation_mask import (adapter_index_for_positions,
+                                        build_batch_adapter_idx,
+                                        find_invocation_start)
+
+
+class TestFindInvocation:
+    def test_basic(self):
+        assert find_invocation_start([1, 2, 7, 8, 9, 3], (7, 8, 9)) == 2
+
+    def test_last_occurrence(self):
+        toks = [7, 8, 9, 1, 7, 8, 9, 2]
+        assert find_invocation_start(toks, (7, 8, 9)) == 4
+
+    def test_absent(self):
+        assert find_invocation_start([1, 2, 3], (7, 8)) is None
+
+    def test_at_end(self):
+        assert find_invocation_start([1, 2, 7, 8], (7, 8)) == 2
+
+    def test_empty_inv(self):
+        assert find_invocation_start([1, 2], ()) is None
+
+
+class TestAdapterIndex:
+    def test_alora_masks_pre_activation(self):
+        pos = np.arange(10)
+        idx = adapter_index_for_positions(pos, slot=2, kind="alora",
+                                          inv_start=4)
+        assert list(idx) == [0] * 4 + [2] * 6
+
+    def test_vanilla_lora_everywhere(self):
+        pos = np.arange(5)
+        idx = adapter_index_for_positions(pos, slot=1, kind="lora",
+                                          inv_start=3)
+        assert list(idx) == [1] * 5
+
+    def test_base_all_zero(self):
+        idx = adapter_index_for_positions(np.arange(5), slot=0, kind=None,
+                                          inv_start=0)
+        assert list(idx) == [0] * 5
+
+    def test_batch_mixed(self):
+        """A batch mixing base / aLoRA / LoRA with varying activation
+        points (the paper's heterogeneous-batch case)."""
+        rows = [np.arange(4), np.arange(4) + 2, np.arange(4)]
+        out = build_batch_adapter_idx(
+            rows, slots=[0, 1, 2], kinds=[None, "alora", "lora"],
+            inv_starts=[0, 4, 0])
+        assert out.shape == (3, 4)
+        assert list(out[0]) == [0, 0, 0, 0]
+        assert list(out[1]) == [0, 0, 1, 1]     # positions 2,3,4,5 vs inv 4
+        assert list(out[2]) == [2, 2, 2, 2]

@@ -1,0 +1,132 @@
+"""aLoRA numerical semantics (paper §2.3):
+
+* pre-activation tokens produce outputs IDENTICAL to the base model
+  (bit-exact — this is what makes KV blocks interchangeable);
+* post-activation tokens equal a fully-adapted (vanilla LoRA) forward;
+* K/V of pre-activation tokens are unchanged even when later tokens are
+  adapted (causality of the masked delta).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.alora import init_adapter_weights, stack_adapters
+from repro.models import forward_full, init_params
+from repro.models.layers import lora_delta, qkv_project
+
+KEY = jax.random.key(0)
+
+
+def setup(arch="granite-3.2-8b", rank=8):
+    cfg = get_reduced(arch)
+    params = init_params(KEY, cfg)
+    w = init_adapter_weights(jax.random.key(5), cfg, rank)
+    stacked = stack_adapters(cfg, [w], rank)
+    return cfg, params, stacked
+
+
+class TestLoraDelta:
+    def test_zero_adapter_is_exact_zero(self):
+        x = jax.random.normal(KEY, (7, 16))
+        a = jnp.zeros((2, 16, 4))
+        b = jax.random.normal(KEY, (2, 4, 24))
+        idx = jnp.zeros((7,), jnp.int32)
+        out = lora_delta(x, a, b, idx)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_matches_dense_reference(self):
+        n, d, r, o, T = 4, 16, 4, 24, 11
+        ks = jax.random.split(KEY, 3)
+        x = jax.random.normal(ks[0], (T, d))
+        a = jax.random.normal(ks[1], (n, d, r))
+        a = a.at[0].set(0.0)
+        b = jax.random.normal(ks[2], (n, r, o))
+        idx = jax.random.randint(KEY, (T,), 0, n)
+        got = lora_delta(x, a, b, idx)
+        want = jnp.stack([(x[t] @ a[idx[t]]) @ b[idx[t]]
+                          for t in range(T)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestActivationSemantics:
+    def test_pre_activation_equals_base(self):
+        """Hidden states BEFORE the activation point are bit-identical
+        with and without the adapter — the paper's reuse precondition."""
+        cfg, params, stacked = setup()
+        B, S, inv = 2, 24, 16
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        aidx = jnp.where(jnp.arange(S) >= inv, 1, 0)[None].repeat(B, 0)
+        h_base, _, c_base = forward_full(params, cfg, toks,
+                                         return_caches=True)
+        h_al, _, c_al = forward_full(params, cfg, toks, adapters=stacked,
+                                     adapter_idx=aidx, return_caches=True)
+        # pre-activation K/V identical (bit-exact)
+        k_b = np.asarray(c_base["seg0"]["k"])[..., :inv, :, :]
+        k_a = np.asarray(c_al["seg0"]["k"])[..., :inv, :, :]
+        np.testing.assert_array_equal(k_b, k_a)
+        # post-activation K/V differ
+        kb2 = np.asarray(c_base["seg0"]["k"])[..., inv:, :, :]
+        ka2 = np.asarray(c_al["seg0"]["k"])[..., inv:, :, :]
+        assert np.abs(kb2 - ka2).max() > 0
+
+    def test_full_activation_equals_vanilla_lora(self):
+        """adapter_idx=slot everywhere == classic LoRA forward."""
+        cfg, params, stacked = setup()
+        B, S = 2, 16
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        all_on = jnp.ones((B, S), jnp.int32)
+        h1, _, _ = forward_full(params, cfg, toks, adapters=stacked,
+                                adapter_idx=all_on)
+        # manual vanilla-LoRA: fold delta into an explicit qkv comparison
+        # at layer level
+        lp = jax.tree.map(lambda a: a[0, 0], params["blocks"]["seg0"])
+        al = jax.tree.map(lambda a: a[0, 0], stacked["seg0"])
+        x = jax.random.normal(KEY, (B, S, cfg.d_model),
+                              jnp.float32).astype(h1.dtype)
+        q1, k1, v1 = qkv_project(lp["attn"], cfg, x, al, all_on)
+        # dense: W + A@B folded
+        wq = lp["attn"]["wq"] + al["aq"][1] @ al["bq"][1]
+        q2 = (x @ wq).reshape(B, S, cfg.num_heads, cfg.head_dim)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_mixed_batch_rows_independent(self):
+        """Row 0 base, row 1 adapted: row 0 must match a pure-base run
+        (the paper's heterogeneous batching)."""
+        cfg, params, stacked = setup()
+        S = 16
+        toks = jax.random.randint(KEY, (2, S), 0, cfg.vocab_size)
+        aidx = jnp.stack([jnp.zeros((S,), jnp.int32),
+                          jnp.ones((S,), jnp.int32)])
+        h_mix, _, _ = forward_full(params, cfg, toks, adapters=stacked,
+                                   adapter_idx=aidx)
+        h_base, _, _ = forward_full(params, cfg, toks)
+        np.testing.assert_array_equal(np.asarray(h_mix[0]),
+                                      np.asarray(h_base[0]))
+        assert np.abs(np.asarray(h_mix[1]) -
+                      np.asarray(h_base[1])).max() > 0
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-2.7b"])
+def test_ssm_pre_activation_state_identical(arch):
+    """Beyond-paper: the SSM recurrent state after pre-activation tokens
+    is identical between base and adapter — the soundness condition for
+    state-snapshot reuse."""
+    cfg = get_reduced(arch)
+    params = init_params(KEY, cfg)
+    w = init_adapter_weights(jax.random.key(5), cfg, 8)
+    stacked = stack_adapters(cfg, [w], 8)
+    B, S, inv = 1, 32, 32        # fully pre-activation
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    aidx = jnp.where(jnp.arange(S) >= inv, 1, 0)[None]
+    _, _, c_base = forward_full(params, cfg, toks, return_caches=True)
+    _, _, c_al = forward_full(params, cfg, toks, adapters=stacked,
+                              adapter_idx=aidx, return_caches=True)
+    for seg in c_base:
+        if "ssm" in c_base[seg]:
+            np.testing.assert_array_equal(
+                np.asarray(c_base[seg]["ssm"]),
+                np.asarray(c_al[seg]["ssm"]))

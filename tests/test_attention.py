@@ -1,0 +1,139 @@
+"""Blocked (flash-style) attention vs naive reference + properties."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    write_kv_cache)
+
+KEY = jax.random.key(0)
+
+
+def naive_attention(q, k, v, causal=True, window=0, q_offset=0):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k).astype(jnp.float32)
+    s = s / (hd ** 0.5)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+@pytest.mark.parametrize("S,H,KV,hd,qb,kb", [
+    (64, 4, 2, 16, 16, 16),
+    (100, 8, 8, 8, 32, 16),     # non-divisible S -> padding
+    (32, 6, 2, 8, 8, 8),        # GQA 3:1
+])
+def test_flash_matches_naive(S, H, KV, hd, qb, kb):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, KV, hd), jnp.float32)
+    got = flash_attention(q, k, v, q_block=qb, kv_block=kb)
+    want = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 8))
+    k = jax.random.normal(ks[1], (1, 64, 4, 8))
+    v = jax.random.normal(ks[2], (1, 64, 4, 8))
+    got = flash_attention(q, k, v, window=16, q_block=16, kv_block=16)
+    want = naive_attention(q, k, v, window=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_q_offset_chunked_equals_full():
+    """Chunked prefill: processing the second half with q_offset against
+    full K/V equals the tail of the full pass."""
+    ks = jax.random.split(KEY, 3)
+    S = 64
+    q = jax.random.normal(ks[0], (1, S, 4, 8))
+    k = jax.random.normal(ks[1], (1, S, 2, 8))
+    v = jax.random.normal(ks[2], (1, S, 2, 8))
+    full = flash_attention(q, k, v, q_block=16, kv_block=16)
+    tail = flash_attention(q[:, 32:], k, v, q_offset=32, q_block=16,
+                           kv_block=16)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, 32:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_skip_masked_blocks_equivalence():
+    """§Perf triangular schedule must be numerically identical."""
+    ks = jax.random.split(KEY, 3)
+    S = 128
+    q = jax.random.normal(ks[0], (1, S, 4, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    base = flash_attention(q, k, v, q_block=32, kv_block=32,
+                           skip_masked_blocks=False)
+    skip = flash_attention(q, k, v, q_block=32, kv_block=32,
+                           skip_masked_blocks=True)
+    np.testing.assert_allclose(np.asarray(skip), np.asarray(base),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_non_causal_encoder_mode():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 48, 4, 8))
+    k = jax.random.normal(ks[1], (1, 48, 4, 8))
+    v = jax.random.normal(ks[2], (1, 48, 4, 8))
+    got = flash_attention(q, k, v, causal=False, q_block=16, kv_block=16)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_naive_last_row():
+    ks = jax.random.split(KEY, 3)
+    S = 40
+    q = jax.random.normal(ks[0], (2, S, 4, 8))
+    k = jax.random.normal(ks[1], (2, S, 2, 8))
+    v = jax.random.normal(ks[2], (2, S, 2, 8))
+    want = naive_attention(q, k, v)[:, -1:]
+    kc = jnp.zeros((2, 64, 2, 8)).at[:, :S].set(k)
+    vc = jnp.zeros((2, 64, 2, 8)).at[:, :S].set(v)
+    got = decode_attention(q[:, -1:], kc, vc, S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ring_buffer_write():
+    k_cache = jnp.zeros((1, 8, 2, 4))
+    v_cache = jnp.zeros((1, 8, 2, 4))
+    k_new = jnp.ones((1, 1, 2, 4))
+    # window 8, position 11 -> slot 3
+    kc, vc = write_kv_cache(k_cache, v_cache, k_new, k_new, 11, window=8)
+    assert float(kc[0, 3].sum()) == 8.0
+    assert float(kc[0, :3].sum()) == 0.0
+
+
+@given(st.integers(8, 48), st.sampled_from([1, 2, 4]),
+       st.sampled_from([8, 16]), st.integers(0, 24))
+@settings(max_examples=20, deadline=None)
+def test_prop_flash_vs_naive(S, G, qb, window):
+    KV, hd = 2, 8
+    ks = jax.random.split(jax.random.key(S * 131 + G), 3)
+    q = jax.random.normal(ks[0], (1, S, KV * G, hd))
+    k = jax.random.normal(ks[1], (1, S, KV, hd))
+    v = jax.random.normal(ks[2], (1, S, KV, hd))
+    got = flash_attention(q, k, v, window=window, q_block=qb, kv_block=qb)
+    want = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,107 @@
+"""Base-aligned block hashing — unit + hypothesis property tests.
+
+These encode the paper's §3 semantics (Fig. 3): which blocks are
+interchangeable between the base model, aLoRA adapters, and vanilla
+LoRA adapters.
+"""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.block_hash import (AdapterKey, block_extra, hash_block,
+                                   request_block_hashes)
+
+BS = 16
+
+
+def toks(n, seed=0):
+    return [(i * 7919 + seed) % 1000 for i in range(n)]
+
+
+class TestBlockExtra:
+    def test_base_model_no_extra(self):
+        assert block_extra(None, 0, 16) == ()
+
+    def test_vanilla_lora_always_salted(self):
+        a = AdapterKey("ad", "lora")
+        assert block_extra(a, 0, 16) == ("ad",)
+        assert block_extra(a, 1000, 1016) == ("ad",)
+
+    def test_alora_pre_activation_base_aligned(self):
+        a = AdapterKey("ad", "alora", inv_start=50)
+        assert block_extra(a, 0, 16) == ()          # entirely before
+        assert block_extra(a, 32, 48) == ()
+        assert block_extra(a, 48, 64) == ("ad",)    # straddles activation
+        assert block_extra(a, 64, 80) == ("ad",)    # after
+
+    def test_alora_boundary_exact(self):
+        a = AdapterKey("ad", "alora", inv_start=48)
+        assert block_extra(a, 32, 48) == ()
+        assert block_extra(a, 48, 64) == ("ad",)
+
+
+class TestRequestHashes:
+    def test_partial_blocks_not_hashed(self):
+        assert len(request_block_hashes(toks(47), BS)) == 2
+        assert len(request_block_hashes(toks(48), BS)) == 3
+
+    def test_alora_prefix_matches_base(self):
+        t = toks(100)
+        base = request_block_hashes(t, BS)
+        al = request_block_hashes(t, BS, AdapterKey("a", "alora", 50))
+        # blocks 0..2 end at 48 <= 50: base-aligned
+        assert base[:3] == al[:3]
+        assert all(b != a for b, a in zip(base[3:], al[3:]))
+
+    def test_two_aloras_share_pre_activation(self):
+        t = toks(100)
+        a1 = request_block_hashes(t, BS, AdapterKey("a1", "alora", 64))
+        a2 = request_block_hashes(t, BS, AdapterKey("a2", "alora", 64))
+        assert a1[:4] == a2[:4]
+        assert a1[4:] != a2[4:]
+
+    def test_vanilla_lora_isolated(self):
+        t = toks(100)
+        base = request_block_hashes(t, BS)
+        lo = request_block_hashes(t, BS, AdapterKey("a", "lora"))
+        assert all(b != l for b, l in zip(base, lo))
+
+    def test_salt_isolates(self):
+        t = toks(64)
+        assert request_block_hashes(t, BS) != \
+            request_block_hashes(t, BS, salt=("img123",))
+
+    def test_chaining_diverges_after_difference(self):
+        t1, t2 = toks(64), toks(64)
+        t2[20] += 1                        # differ inside block 1
+        h1 = request_block_hashes(t1, BS)
+        h2 = request_block_hashes(t2, BS)
+        assert h1[0] == h2[0]
+        assert h1[1] != h2[1]
+        assert h1[2] != h2[2]              # chained: divergence persists
+
+
+@given(st.lists(st.integers(0, 500), min_size=0, max_size=200),
+       st.lists(st.integers(0, 500), min_size=0, max_size=200),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=60, deadline=None)
+def test_prop_hash_prefix_equality(t1, t2, bs):
+    """hash[i] equal  ⇔  token prefixes up to block i+1 equal."""
+    h1 = request_block_hashes(t1, bs)
+    h2 = request_block_hashes(t2, bs)
+    for i in range(min(len(h1), len(h2))):
+        same_prefix = t1[:(i + 1) * bs] == t2[:(i + 1) * bs]
+        assert (h1[i] == h2[i]) == same_prefix
+
+
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=150),
+       st.integers(0, 160),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=60, deadline=None)
+def test_prop_alora_base_alignment(t, inv, bs):
+    """aLoRA block hash equals the base hash exactly when the block ends
+    at or before the activation point (the paper's reuse criterion)."""
+    base = request_block_hashes(t, bs)
+    al = request_block_hashes(t, bs, AdapterKey("x", "alora", inv))
+    for i, (hb, ha) in enumerate(zip(base, al)):
+        assert (hb == ha) == ((i + 1) * bs <= inv)

@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret
+mode (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import alora_qkv_op, paged_attention_op
+from repro.kernels.ref import alora_qkv_ref, paged_attention_ref
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("T,d,out,n,r", [
+    (64, 32, 48, 2, 4),
+    (100, 64, 96, 3, 8),        # padding path
+    (7, 32, 48, 4, 16),         # tiny T
+    (256, 128, 256, 1, 4),      # zero-adapter-only stack
+    (33, 48, 64, 5, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_alora_qkv_sweep(T, d, out, n, r, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (T, d)).astype(dtype)
+    w = (jax.random.normal(ks[1], (d, out)) * 0.1).astype(dtype)
+    a = (jax.random.normal(ks[2], (n, d, r)) * 0.1).astype(dtype)
+    a = a.at[0].set(0.0)
+    b = (jax.random.normal(ks[3], (n, r, out)) * 0.1).astype(dtype)
+    idx = jax.random.randint(ks[4], (T,), 0, n)
+    got = alora_qkv_op(x, w, a, b, idx, interpret=True)
+    want = alora_qkv_ref(x, w, a, b, idx)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_alora_qkv_mask_semantics():
+    """Kernel applies the adapter ONLY at post-activation tokens."""
+    T, d, out, r = 32, 16, 24, 4
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (T, d))
+    w = jax.random.normal(ks[1], (d, out)) * 0.1
+    a = jnp.concatenate([jnp.zeros((1, d, r)),
+                         jax.random.normal(ks[2], (1, d, r))])
+    b = jax.random.normal(ks[3], (2, r, out))
+    inv = 10
+    idx = jnp.where(jnp.arange(T) >= inv, 1, 0)
+    got = alora_qkv_op(x, w, a, b, idx, interpret=True)
+    base = x @ w
+    np.testing.assert_allclose(np.asarray(got[:inv]),
+                               np.asarray(base[:inv]),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(got[inv:] - base[inv:])).max() > 0
+
+
+@pytest.mark.parametrize("B,H,KV,hd,NB,bs,nb,window", [
+    (3, 8, 2, 32, 16, 8, 4, 0),
+    (2, 4, 4, 16, 8, 4, 2, 8),       # MHA + window
+    (1, 16, 2, 64, 32, 16, 8, 0),    # GQA 8:1
+    (4, 4, 1, 8, 8, 4, 4, 0),        # single kv head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, H, KV, hd, NB, bs, nb, window, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (NB, bs, KV, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (NB, bs, KV, hd)).astype(dtype)
+    bt = jax.random.randint(ks[3], (B, nb), 0, NB)
+    ln = jax.random.randint(ks[4], (B,), 1, nb * bs + 1)
+    got = paged_attention_op(q, kp, vp, bt, ln, window=window,
+                             interpret=True)
+    want = paged_attention_ref(q, kp, vp, bt, ln, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_ignores_padding_blocks():
+    """Entries of the block table beyond `lengths` must not matter."""
+    B, H, KV, hd, NB, bs, nb = 1, 4, 2, 16, 8, 4, 4
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (NB, bs, KV, hd))
+    vp = jax.random.normal(ks[2], (NB, bs, KV, hd))
+    ln = jnp.array([6])                        # 1.5 blocks valid
+    bt1 = jnp.array([[0, 1, 2, 3]])
+    bt2 = jnp.array([[0, 1, 7, 7]])            # different padding blocks
+    o1 = paged_attention_op(q, kp, vp, bt1, ln, interpret=True)
+    o2 = paged_attention_op(q, kp, vp, bt2, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-6, atol=1e-6)

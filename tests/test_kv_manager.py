@@ -1,0 +1,80 @@
+"""Paged block manager semantics (vLLM-style ref-count + lazy eviction)."""
+import pytest
+
+from repro.core.block_hash import hash_block
+from repro.core.kv_manager import BlockManager, OutOfBlocks
+
+
+def h(i):
+    return hash_block(None, [i])
+
+
+def test_allocate_release_cycle():
+    m = BlockManager(4, 16)
+    bids = [m.allocate() for _ in range(4)]
+    assert m.num_free() == 0
+    with pytest.raises(OutOfBlocks):
+        m.allocate()
+    m.release_all(bids)
+    assert m.num_free() == 4
+
+
+def test_freed_block_revivable_until_evicted():
+    m = BlockManager(2, 16)
+    b = m.allocate()
+    m.register(b, h(1))
+    m.release(b)
+    # still in index though free
+    assert m.lookup(h(1)) == b
+    got = m.acquire_cached(h(1))
+    assert got == b
+    m.release(b)
+    # allocating both blocks evicts LRU entries
+    b2 = m.allocate()
+    b3 = m.allocate()
+    assert m.lookup(h(1)) is None          # evicted
+    assert m.evictions >= 1
+
+
+def test_lru_eviction_order():
+    m = BlockManager(3, 16)
+    bs = [m.allocate() for _ in range(3)]
+    for i, b in enumerate(bs):
+        m.register(b, h(i))
+    m.release(bs[1])                       # freed first -> evicted first
+    m.release(bs[0])
+    m.release(bs[2])
+    m.allocate()
+    assert m.lookup(h(1)) is None
+    assert m.lookup(h(0)) is not None
+
+
+def test_refcount_sharing():
+    m = BlockManager(2, 16)
+    b = m.allocate()
+    m.register(b, h(5))
+    m.release(b)
+    a1 = m.acquire_cached(h(5))
+    a2 = m.acquire_cached(h(5))
+    assert a1 == a2 == b
+    m.release(b)
+    assert m.num_free() == 1               # still held once
+    m.release(b)
+    assert m.num_free() == 2
+
+
+def test_register_dedup():
+    m = BlockManager(4, 16)
+    b1, b2 = m.allocate(), m.allocate()
+    assert m.register(b1, h(7)) == b1
+    assert m.register(b2, h(7)) == b1      # canonical id kept
+
+
+def test_hit_rate_accounting():
+    m = BlockManager(4, 16)
+    assert m.acquire_cached(h(1)) is None
+    b = m.allocate()
+    m.register(b, h(1))
+    assert m.acquire_cached(h(1)) == b
+    assert m.hits == 1 and m.misses == 1
+    assert m.hit_rate() == 0.5

@@ -1,0 +1,71 @@
+"""MoE routing + the two dispatch implementations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.moe import init_moe, moe_masked_dense, route
+
+KEY = jax.random.key(0)
+CFG = get_reduced("granite-moe-1b-a400m")
+P = init_moe(KEY, CFG, jnp.float32)
+
+
+def test_router_topk_weights_normalized():
+    x = jax.random.normal(KEY, (3, 8, CFG.d_model))
+    w, idx, aux = route(P, CFG, x)
+    k = CFG.moe.experts_per_token
+    assert w.shape == (3, 8, k) and idx.shape == (3, 8, k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert float(aux) > 0
+
+
+def test_masked_dense_matches_per_token_reference():
+    x = jax.random.normal(jax.random.key(1), (1, 6, CFG.d_model))
+    y, _ = moe_masked_dense(P, CFG, x)
+    w, idx, _ = route(P, CFG, x)
+    # reference: per-token loop over its experts
+    d = CFG.d_model
+    want = np.zeros((1, 6, d), np.float32)
+    for t in range(6):
+        for j in range(CFG.moe.experts_per_token):
+            e = int(idx[0, t, j])
+            xe = x[0, t]
+            h = jax.nn.silu(xe @ P["w_gate"][e]) * (xe @ P["w_up"][e])
+            want[0, t] += float(w[0, t, j]) * np.asarray(h @ P["w_down"][e])
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-4)
+
+
+def test_expert_parallel_matches_masked_dense_1dev():
+    """On a 1-device mesh with generous capacity the expert-parallel
+    shard_map path must agree with the dense reference (no drops)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.moe import moe_expert_parallel
+    mesh = make_host_mesh()
+    x = jax.random.normal(jax.random.key(2), (2, 8, CFG.d_model))
+    y_ref, _ = moe_masked_dense(P, CFG, x)
+    y_ep, _ = moe_expert_parallel(P, CFG, x, mesh=mesh,
+                                  batch_axes=("data",),
+                                  model_axis="model",
+                                  capacity_factor=32.0)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_parallel_drops_on_overflow():
+    """With capacity 0+ the output shrinks (tokens dropped), proving the
+    capacity mechanism engages rather than silently growing buffers."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.moe import moe_expert_parallel
+    mesh = make_host_mesh()
+    x = jax.random.normal(jax.random.key(2), (2, 8, CFG.d_model))
+    y_full, _ = moe_expert_parallel(P, CFG, x, mesh=mesh,
+                                    batch_axes=("data",),
+                                    model_axis="model",
+                                    capacity_factor=32.0)
+    y_tight, _ = moe_expert_parallel(P, CFG, x, mesh=mesh,
+                                     batch_axes=("data",),
+                                     model_axis="model",
+                                     capacity_factor=0.05)
+    assert float(jnp.abs(y_tight).sum()) < float(jnp.abs(y_full).sum())

@@ -1,0 +1,104 @@
+"""§Perf optimization variants must preserve numerics.
+
+Each Runtime knob exercised by the hillclimbing iterations is checked
+against the baseline path on a 1-device mesh (semantics) — the roofline
+effects are measured by the dry-run (EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import (decode_step, forward_full, init_decode_caches,
+                          init_params, logits_for)
+from repro.models.attention import (dequantize_kv, flash_attention,
+                                    flash_attention_remat, quantize_kv)
+from repro.models.model import Runtime
+
+KEY = jax.random.key(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("stablelm-12b")
+    return cfg, init_params(KEY, cfg)
+
+
+def test_context_parallel_forward_exact(setup):
+    cfg, params = setup
+    toks = jax.random.randint(jax.random.key(1), (2, 64), 0,
+                              cfg.vocab_size)
+    h0, _, _ = forward_full(params, cfg, toks)
+    rt = Runtime(mesh=make_host_mesh(), batch_axes=("data",),
+                 shard_activations=True, context_parallel=True)
+    h1, _, _ = forward_full(params, cfg, toks, rt)
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+
+
+def test_context_parallel_grads_close(setup):
+    cfg, params = setup
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0,
+                              cfg.vocab_size)
+    rt = Runtime(mesh=make_host_mesh(), batch_axes=("data",),
+                 shard_activations=True, context_parallel=True)
+
+    def loss(params, rt):
+        h, _, _ = forward_full(params, cfg, toks, rt)
+        return jnp.sum(h.astype(jnp.float32) ** 2)
+
+    g0 = jax.grad(loss)(params, Runtime())
+    g1 = jax.grad(loss)(params, rt)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_flash_remat_gradients_match_baseline():
+    ks = jax.random.split(KEY, 3)
+    S, H, KV, hd = 48, 4, 2, 16
+    q = jax.random.normal(ks[0], (2, S, H, hd))
+    k = jax.random.normal(ks[1], (2, S, KV, hd))
+    v = jax.random.normal(ks[2], (2, S, KV, hd))
+
+    def l0(q, k, v):
+        return (flash_attention(q, k, v, q_block=16, kv_block=16)
+                ** 2).sum()
+
+    def l1(q, k, v):
+        return (flash_attention_remat(q, k, v, True, 0, 0, 16, 16)
+                ** 2).sum()
+
+    g0 = jax.grad(l0, argnums=(0, 1, 2))(q, k, v)
+    g1 = jax.grad(l1, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_kv_quant_roundtrip_error_bounded():
+    x = jax.random.normal(KEY, (4, 8, 2, 32))
+    q, s = quantize_kv(x)
+    x2 = dequantize_kv(q, s, x.dtype)
+    rel = float(jnp.abs(x2 - x).max() / jnp.abs(x).max())
+    assert rel < 0.01
+    assert q.dtype == jnp.int8
+
+
+def test_kv_quant_decode_argmax_preserved(setup):
+    cfg, params = setup
+    B, S = 2, 20
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0,
+                              cfg.vocab_size)
+    h, _, _ = forward_full(params, cfg, toks)
+    want = logits_for(params, cfg, h)[:, -1]
+    rt_q = Runtime(kv_cache_quant=True)
+    caches = init_decode_caches(cfg, B, 32, rt_q)
+    lg = None
+    for t in range(S):
+        lg, caches = decode_step(params, cfg, toks[:, t:t + 1], caches,
+                                 t, rt_q)
+    rel = float(jnp.abs(lg[:, 0] - want).max() / jnp.abs(want).max())
+    assert rel < 0.02
+    assert bool((jnp.argmax(lg[:, 0], -1) == jnp.argmax(want, -1)).all())

@@ -1,0 +1,104 @@
+"""Cross-model prefix cache: match semantics incl. the SSM state index."""
+from repro.core.block_hash import AdapterKey, request_block_hashes
+from repro.core.kv_manager import BlockManager
+from repro.core.prefix_cache import PrefixCache
+
+BS = 16
+
+
+def fill(pc: PrefixCache, mgr: BlockManager, tokens, adapter=None,
+         salt=()):
+    """Simulate a request prefilling `tokens` and completing."""
+    hashes = request_block_hashes(tokens, BS, adapter, salt)
+    bids = []
+    for h in hashes:
+        bid = mgr.allocate()
+        pc.register_kv_block(h, bid)
+        bids.append(bid)
+    mgr.release_all(bids)
+    return hashes
+
+
+def make():
+    mgr = BlockManager(64, BS)
+    return PrefixCache(block_size=BS, kv_manager=mgr), mgr
+
+
+def test_base_to_alora_reuse():
+    pc, mgr = make()
+    t = list(range(100))
+    fill(pc, mgr, t)
+    m = pc.match_and_acquire(t, AdapterKey("a", "alora", 80))
+    assert m.n_tokens == 80             # blocks 0..4 end at 80 <= 80
+    assert len(m.kv_blocks) == 5
+
+
+def test_alora_to_base_two_way():
+    pc, mgr = make()
+    t = list(range(100))
+    fill(pc, mgr, t, AdapterKey("a", "alora", 64))
+    m = pc.match_and_acquire(t, None)
+    assert m.n_tokens == 64             # pre-activation blocks reusable
+
+
+def test_alora_to_sibling_alora():
+    pc, mgr = make()
+    t = list(range(100))
+    fill(pc, mgr, t, AdapterKey("a1", "alora", 64))
+    m = pc.match_and_acquire(t, AdapterKey("a2", "alora", 64))
+    assert m.n_tokens == 64
+
+
+def test_vanilla_lora_no_cross_reuse():
+    pc, mgr = make()
+    t = list(range(100))
+    fill(pc, mgr, t)
+    m = pc.match_and_acquire(t, AdapterKey("a", "lora"))
+    assert m.n_tokens == 0
+
+
+def test_miss_releases_nothing_dangling():
+    pc, mgr = make()
+    t = list(range(100))
+    fill(pc, mgr, t)
+    before = mgr.num_free()
+    m = pc.match_and_acquire(list(range(50, 150)), None)
+    assert m.n_tokens == 0
+    assert mgr.num_free() == before
+
+
+def test_state_boundary_consistency():
+    """Hybrid archs: reuse depth = deepest boundary with BOTH a state
+    snapshot and full KV coverage."""
+    kv = BlockManager(64, BS)
+    st = BlockManager(8, BS)
+    pc = PrefixCache(block_size=BS, kv_manager=kv, state_manager=st)
+    t = list(range(96))
+    hashes = request_block_hashes(t, BS)
+    bids = []
+    for h in hashes:                      # KV for all 6 blocks
+        b = kv.allocate()
+        pc.register_kv_block(h, b)
+        bids.append(b)
+    kv.release_all(bids)
+    s = st.allocate()                     # state snapshot only at block 3
+    pc.register_state(hashes[3], s)
+    st.release(s)
+
+    m = pc.match_and_acquire(t, None)
+    assert m.n_tokens == 4 * BS           # limited by the state snapshot
+    assert len(m.kv_blocks) == 4
+    assert m.state_slot is not None
+
+
+def test_pure_ssm_no_kv_constraint():
+    st = BlockManager(8, BS)
+    pc = PrefixCache(block_size=BS, state_manager=st)
+    t = list(range(96))
+    hashes = request_block_hashes(t, BS)
+    s = st.allocate()
+    pc.register_state(hashes[5], s)
+    st.release(s)
+    m = pc.match_and_acquire(t, None)
+    assert m.n_tokens == 6 * BS
+    assert m.state_slot is not None

@@ -1,0 +1,109 @@
+"""Mamba2 SSD: chunked-scan algebra, state carry, masking, boundaries."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_reduced
+from repro.models.ssm import (init_ssm, init_ssm_state, ssd_decode_step,
+                              ssd_forward)
+
+KEY = jax.random.key(0)
+CFG = get_reduced("mamba2-2.7b")
+P = init_ssm(KEY, CFG, jnp.float32)
+
+
+def x_of(B, S, seed=0):
+    return jax.random.normal(jax.random.key(seed), (B, S, CFG.d_model))
+
+
+def test_chunk_size_invariance():
+    """SSD output must not depend on the chunk size."""
+    import dataclasses
+    x = x_of(2, 96)
+    y1, s1, c1 = ssd_forward(P, CFG, x)
+    cfg2 = CFG.replace(ssm=dataclasses.replace(CFG.ssm, chunk_size=16))
+    y2, s2, c2 = ssd_forward(P, cfg2, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_split_carry_equivalence():
+    x = x_of(2, 100)
+    y, s, c = ssd_forward(P, CFG, x)
+    ya, sa, ca = ssd_forward(P, CFG, x[:, :40])
+    yb, sb, cb = ssd_forward(P, CFG, x[:, 40:], ssm_state=sa,
+                             conv_state=ca)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 1)),
+                               np.asarray(y), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(s),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_matches_forward():
+    """Sequential single-token decode == full forward on the suffix."""
+    S, T = 32, 4
+    x = x_of(1, S + T, seed=3)
+    y_full, s_full, c_full = ssd_forward(P, CFG, x)
+    y_pre, s, c = ssd_forward(P, CFG, x[:, :S])
+    outs = []
+    for t in range(T):
+        y_t, s, c = ssd_decode_step(P, CFG, x[:, S + t:S + t + 1], s, c)
+        outs.append(y_t)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(y_full[:, S:]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_valid_len_freezes_state():
+    x = x_of(1, 64, seed=4)
+    y_ref, s_ref, c_ref = ssd_forward(P, CFG, x[:, :40])
+    noise = jax.random.normal(jax.random.key(9), (1, 24, CFG.d_model))
+    xp = jnp.concatenate([x[:, :40], noise], axis=1)
+    y, s, c = ssd_forward(P, CFG, xp, valid_len=40)
+    # chunk padding changes the summation order (Q=min(chunk,S)), so the
+    # comparison is fp-tolerance, not bit-exact; the ENGINE path aligns
+    # chunk_size == block_size where exactness holds (test_engine.py).
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y[:, :40]), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_boundary_states_match_prefix_runs():
+    x = x_of(1, 128, seed=5)
+    _, _, _, (b_ssm, b_conv) = ssd_forward(P, CFG, x,
+                                           return_boundary_states=True)
+    Q = CFG.ssm.chunk_size
+    for c_idx in range(128 // Q):
+        _, s, cv = ssd_forward(P, CFG, x[:, :(c_idx + 1) * Q])
+        np.testing.assert_allclose(np.asarray(b_ssm[c_idx]),
+                                   np.asarray(s), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(b_conv[c_idx]),
+                                   np.asarray(cv), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(5, 70), st.integers(1, 60))
+@settings(max_examples=15, deadline=None)
+def test_prop_split_anywhere(B, S1, S2):
+    """State carry is exact for ANY split point (hypothesis)."""
+    x = jax.random.normal(jax.random.key(S1 * 97 + S2), (B, S1 + S2,
+                                                         CFG.d_model))
+    y, s, _ = ssd_forward(P, CFG, x)
+    ya, sa, ca = ssd_forward(P, CFG, x[:, :S1])
+    yb, sb, _ = ssd_forward(P, CFG, x[:, S1:], ssm_state=sa,
+                            conv_state=ca)
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(s),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([ya, yb], 1)), np.asarray(y),
+        rtol=2e-4, atol=2e-4)
