@@ -14,9 +14,11 @@ import time
 def main() -> None:
     from benchmarks import (bench_adapter_base, bench_async,
                             bench_batch_size, bench_generation_length,
-                            bench_kernels, bench_multi_adapter,
-                            bench_prompt_length, roofline)
+                            bench_kernels, bench_mixed_batch,
+                            bench_multi_adapter, bench_prompt_length,
+                            roofline)
     sections = {
+        "mixed_batch": bench_mixed_batch.run,  # unified-step vs v0 path
         "fig6": bench_prompt_length.run,       # prompt-length sweep
         "fig11": bench_adapter_base.run,       # adapter->base
         "fig10": bench_generation_length.run,  # generation-length sweep

@@ -70,10 +70,16 @@ class BlockManager:
         if bid is None:
             self.misses += 1
             return None
-        if self.meta[bid].ref == 0:
-            self.free.pop(bid, None)           # revive from free pool
-        self.meta[bid].ref += 1
+        self.acquire(bid)
         self.hits += 1
+        return bid
+
+    def acquire(self, bid: int) -> int:
+        """Ref+1 a specific block by id (reviving it from the free pool
+        if needed) — dedup remapping onto a canonical block."""
+        if self.meta[bid].ref == 0:
+            self.free.pop(bid, None)
+        self.meta[bid].ref += 1
         return bid
 
     def allocate(self) -> int:

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.alora_qkv import alora_qkv
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           ragged_paged_attention)
 
 
 def _on_tpu() -> bool:
@@ -53,6 +54,21 @@ def paged_attention_op(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            window=window, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def ragged_paged_attention_op(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              req_rows: jax.Array, q_lens: jax.Array, *,
+                              window: int = 0,
+                              interpret: Optional[bool] = None
+                              ) -> jax.Array:
+    """Mixed-batch ragged paged attention.  q: (T, H, hd) -> (T, H, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ragged_paged_attention(q, k_pool, v_pool, block_tables,
+                                  req_rows, q_lens, window=window,
+                                  interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
                       dA: jax.Array, dt: jax.Array, *, chunk: int = 128,
@@ -78,5 +94,6 @@ def ssd_chunk_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
 
 # pure-jnp oracles re-exported for benchmarks/tests
 paged_attention_ref = ref.paged_attention_ref
+ragged_paged_attention_ref = ref.ragged_paged_attention_ref
 alora_qkv_ref = ref.alora_qkv_ref
 ssd_chunk_ref = ref.ssd_chunk_ref

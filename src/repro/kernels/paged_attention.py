@@ -69,6 +69,75 @@ def _paged_attn_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _ragged_paged_attn_kernel(tables_ref, rows_ref, lens_ref, q_ref, k_ref,
+                              v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                              bs: int, window: int, scale: float):
+    # the body is the dense-batch kernel with grid axis 0 meaning "token"
+    # instead of "sequence"; rows_ref is consumed by the BlockSpec
+    # index_maps (token → its request's block-table row), not here
+    _paged_attn_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, bs=bs, window=window,
+                       scale=scale)
+
+
+def ragged_paged_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           req_rows: jax.Array, q_lens: jax.Array, *,
+                           window: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """Mixed-batch variant of :func:`paged_attention`: one query row per
+    packed token (decode singletons and prefill-chunk tokens in the same
+    launch), with a second scalar-prefetch indirection ``req_rows`` so the
+    K/V index_map resolves (token, block-step) → the token's *request's*
+    physical block.
+
+    q: (T, H, hd); k_pool/v_pool: (NB, bs, KV, hd);
+    block_tables: (R, nb) int32; req_rows: (T,) int32;
+    q_lens: (T,) int32 — causal length per token (position + 1).
+    Returns (T, H, hd).  Matches
+    ``repro.kernels.ref.ragged_paged_attention_ref``."""
+    T, H, hd = q.shape
+    NB, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    qr = q.reshape(T, KV, G, hd)
+    kernel = functools.partial(_ragged_paged_attn_kernel, bs=bs,
+                               window=window, scale=scale)
+    grid = (T, KV, nb)                     # block-step innermost
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda t, kv, ib, tables, rows, lens:
+                             (t, kv, 0, 0)),                      # q
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda t, kv, ib, tables, rows, lens:
+                             (tables[rows[t], ib], 0, kv, 0)),    # k
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda t, kv, ib, tables, rows, lens:
+                             (tables[rows[t], ib], 0, kv, 0)),    # v
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda t, kv, ib, tables, rows, lens:
+                                   (t, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G,), jnp.float32),        # m
+                pltpu.VMEM((G,), jnp.float32),        # l
+                pltpu.VMEM((G, hd), jnp.float32),     # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, req_rows, q_lens, qr, k_pool, v_pool)
+    return out.reshape(T, H, hd)
+
+
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_tables: jax.Array, lengths: jax.Array, *,
                     window: int = 0, interpret: bool = False) -> jax.Array:

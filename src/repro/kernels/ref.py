@@ -50,6 +50,49 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def ragged_paged_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               req_rows: jax.Array, q_lens: jax.Array, *,
+                               window: int = 0) -> jax.Array:
+    """Mixed-batch (ragged) GQA attention over paged KV blocks.
+
+    One query row per packed token — decode singletons and prefill-chunk
+    tokens alike — each attending over its own request's blocks up to its
+    causal length.  The current token's K/V must already be written to
+    the pool (the mixed step writes before it reads).
+
+    q:            (T, H, hd)           — one query row per packed token
+    k_pool/v_pool:(NB, bs, KV, hd)     — global block pools
+    block_tables: (R, nb) int32        — per-request physical block ids
+    req_rows:     (T,) int32           — token → request row
+    q_lens:       (T,) int32           — causal length per token
+                                         (position + 1; 0 = masked row)
+
+    Returns (T, H, hd).  Rows with ``q_lens == 0`` return garbage
+    (uniform attention over masked keys) — callers slice them off.
+    """
+    T, H, hd = q.shape
+    NB, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    bt = block_tables[req_rows]                       # (T, nb)
+    k = k_pool[bt].reshape(T, nb * bs, KV, hd)
+    v = v_pool[bt].reshape(T, nb * bs, KV, hd)
+    qr = q.reshape(T, KV, G, hd)
+    s = jnp.einsum("tkgd,tskd->tkgs", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(nb * bs, dtype=jnp.int32)[None, :]
+    valid = pos < q_lens[:, None]
+    if window > 0:
+        valid = valid & (pos > q_lens[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("tkgs,tskd->tkgd", p, v.astype(jnp.float32))
+    return out.reshape(T, H, hd).astype(q.dtype)
+
+
 def ssd_chunk_ref(x: jax.Array, B: jax.Array, C: jax.Array,
                   dA: jax.Array, dt: jax.Array):
     """Token-by-token SSD recurrence oracle.

@@ -347,6 +347,37 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def ragged_paged_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           req_rows: jax.Array, q_lens: jax.Array, *,
+                           window: int = 0,
+                           impl: str = "ref") -> jax.Array:
+    """Mixed-batch attention over the paged pool — the unified serving
+    step's attention: every packed token (decode singletons and prefill
+    chunks alike) attends over its own request's blocks up to its causal
+    length.  The step writes the batch's K/V into the pool *before* this
+    runs, so intra-chunk causality falls out of the q_lens mask.
+
+    q: (T, H, hd); k_pool/v_pool: (NB, bs, KV, hd);
+    block_tables: (R, nb) int32; req_rows: (T,) int32; q_lens: (T,) int32.
+
+    impl: "ref" (jnp gather path, runs everywhere) | "pallas" (TPU
+    kernel) | "pallas_interpret" (kernel in interpret mode, for tests).
+    """
+    if impl == "ref":
+        from repro.kernels.ref import ragged_paged_attention_ref
+        return ragged_paged_attention_ref(
+            q, k_pool, v_pool, block_tables, req_rows, q_lens,
+            window=window)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown ragged-attention impl {impl!r}: "
+                         "expected 'ref', 'pallas' or 'pallas_interpret'")
+    from repro.kernels.paged_attention import \
+        ragged_paged_attention as kernel
+    return kernel(q, k_pool, v_pool, block_tables, req_rows, q_lens,
+                  window=window, interpret=(impl == "pallas_interpret"))
+
+
 def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
     """Full (non-causal, unmasked) attention, e.g. decoder→encoder.
 

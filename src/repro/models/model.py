@@ -294,9 +294,10 @@ def _context_parallel_attention(cfg: ModelConfig, rt: Runtime, q, k, v,
     spec = P(b, m, None, None)
     # check_vma off: flash_attention's scan carries start as invariant
     # zeros, which the varying-axes checker rejects inside shard_map
-    return jax.shard_map(local, mesh=rt.mesh,
-                         in_specs=(spec, spec, spec),
-                         out_specs=spec, check_vma=False)(q, k, v)
+    from repro.distributed.sharding import shard_map
+    return shard_map(local, mesh=rt.mesh,
+                     in_specs=(spec, spec, spec),
+                     out_specs=spec, check_vma=False)(q, k, v)
 
 
 def cross_attn_sublayer(lp: Params, cfg: ModelConfig, x: jax.Array,

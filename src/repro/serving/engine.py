@@ -41,7 +41,7 @@ from repro.core.prefix_cache import PrefixCache
 from repro.models.model import Runtime, period_segments
 from repro.serving.metrics import MetricsAggregate, aggregate
 from repro.serving.request import Request, State
-from repro.serving.runner import ModelRunner, RunnerConfig
+from repro.serving.runner import MixedBatch, ModelRunner, RunnerConfig
 
 
 @dataclass(frozen=True)
@@ -52,6 +52,14 @@ class EngineConfig:
     num_state_slots: int = 64
     max_batched_tokens: int = 128     # chunked-prefill budget per step
     enable_prefix_cache: bool = True
+    # "mixed": one jitted device call per step over a single ragged batch
+    # of all decode tokens + prefill chunks (vLLM v1-style; auto-falls
+    # back to "sequential" for SSM/hybrid and encoder-decoder archs).
+    # "sequential": the v0-style separate decode_batch/prefill_chunk path.
+    execution_mode: str = "mixed"
+    # attention impl for the mixed step: "ref" (jnp gather, runs
+    # everywhere) | "pallas" (TPU kernel) | "pallas_interpret" (tests)
+    mixed_attn_impl: str = "ref"
     # execution-time model: clock advances by measured wall time of each
     # step, scaled by this factor (1.0 = honest CPU timing)
     time_scale: float = 1.0
@@ -89,6 +97,7 @@ class Engine:
             num_blocks=engine_cfg.num_blocks + 1,
             max_running=engine_cfg.max_running + 1,
             num_state_slots=engine_cfg.num_state_slots + 1,
+            mixed_attn_impl=engine_cfg.mixed_attn_impl,
         )
         self.runner = ModelRunner(cfg, params, rcfg, stacked, rt)
 
@@ -112,6 +121,16 @@ class Engine:
         self.done: List[Request] = []
         self._free_slots = list(range(engine_cfg.max_running))
         self._xkv: Dict[int, tuple] = {}      # req_id -> encoder KV
+        self._budget_debt = 0                 # min-progress overdraft
+        self.preemptions = 0
+        self.last_step_tokens = (0, 0)        # (n_decode, n_prefill)
+        if engine_cfg.execution_mode not in ("mixed", "sequential"):
+            raise ValueError(
+                f"unknown execution_mode {engine_cfg.execution_mode!r}: "
+                "expected 'mixed' or 'sequential'")
+        self.use_mixed = (engine_cfg.execution_mode == "mixed"
+                          and self.runner.Ls == 0
+                          and not cfg.is_encoder_decoder)
 
     # ------------------------------------------------------------------
     # submission
@@ -176,18 +195,27 @@ class Engine:
         # allocate blocks for the uncached remainder of the prompt
         n_total_blocks = (n_prompt + bs - 1) // bs
         n_new = n_total_blocks - len(kv_blocks)
+        new_blocks: List[int] = []
+
+        def bail() -> bool:
+            # single cleanup for every failure path: return everything
+            # acquired so far — cache-matched blocks, partially
+            # allocated fresh blocks, and the state-snapshot ref
+            if self.kv_mgr is not None:
+                self.kv_mgr.release_all(kv_blocks + new_blocks)
+            if state_slot is not None:
+                self.st_mgr.release(state_slot)
+            return False
+
         mgr = self.kv_mgr
         if mgr is not None:
             if mgr.num_free() < n_new:
-                for bid in kv_blocks:
-                    mgr.release(bid)
-                if state_slot is not None:
-                    self.st_mgr.release(state_slot)
-                return False
+                return bail()
             try:
-                new_blocks = [mgr.allocate() for _ in range(n_new)]
+                for _ in range(n_new):
+                    new_blocks.append(mgr.allocate())
             except OutOfBlocks:
-                return False
+                return bail()
             req.block_ids = kv_blocks + new_blocks
         req.n_computed = n_reuse
         req.n_cache_hit_tokens = n_reuse
@@ -200,9 +228,10 @@ class Engine:
             else:
                 self.runner.reset_live(req.run_slot)
 
-        # embeddings + (whisper) encoder KV
-        req.input_embeds = self.runner.build_input_embeds(
-            req.prompt, req.prefix_embeds)
+        # embeddings + (whisper) encoder KV.  Kept host-side (numpy) so
+        # the mixed-batch assembly packs rows without device round-trips.
+        req.input_embeds = np.asarray(self.runner.build_input_embeds(
+            req.prompt, req.prefix_embeds))
         if self.cfg.is_encoder_decoder:
             assert req.frame_embeds is not None
             self._xkv[req.req_id] = self.runner.encode(req.frame_embeds)
@@ -231,7 +260,8 @@ class Engine:
         # admission can hand freed blocks to new/preempted requests —
         # this (plus recompute-preemption below) guarantees progress
         # under block starvation (vLLM's decode-priority scheduling)
-        n_decode = self._run_decodes()
+        decodes = self._schedule_decodes()
+        n_decode = len(decodes)
 
         # admit FCFS while capacity allows
         while self.waiting and len(self.running) < self.ecfg.max_running:
@@ -239,8 +269,30 @@ class Engine:
                 break
             self.waiting.pop(0)
 
-        budget = self.ecfg.max_batched_tokens - n_decode
-        n_prefill = self._run_prefills(max(budget, self.ecfg.block_size))
+        # chunked-prefill budget: whatever the decodes left of
+        # max_batched_tokens, minus last step's minimum-progress
+        # overdraft.  Only when NO decode ran may prefill overdraw by one
+        # block (minimum progress); the overdraft is charged to the next
+        # step instead of silently violating the cap.
+        avail = self.ecfg.max_batched_tokens - n_decode - self._budget_debt
+        budget = avail
+        if n_decode == 0 and budget < self.ecfg.block_size:
+            budget = self.ecfg.block_size
+        prefills = self._schedule_prefills(budget)
+        n_prefill = sum(hi - lo for _, lo, hi in prefills)
+        # everything spent this step (decodes are non-deferrable) plus
+        # inherited debt beyond the cap carries forward — debt is paid
+        # down by under-cap steps, never silently forgiven
+        self._budget_debt = max(0, n_decode + n_prefill
+                                + self._budget_debt
+                                - self.ecfg.max_batched_tokens)
+        self.last_step_tokens = (n_decode, n_prefill)
+
+        if self.use_mixed:
+            self._execute_mixed(decodes, prefills)
+        else:
+            self._execute_decodes(decodes)
+            self._execute_prefills(prefills)
         self._finish_requests()
         # block starvation with zero progress: preempt the most recent
         # running request (vLLM recompute-preemption) so the others can
@@ -263,16 +315,17 @@ class Engine:
         r.state = State.QUEUED
         self.running.remove(r)
         self.waiting.insert(0, r)
-        self.preemptions = getattr(self, "preemptions", 0) + 1
+        self.preemptions += 1
         if self.preemptions > 1000:
             raise RuntimeError("preemption livelock: pool too small for "
                                "a single request")
 
     # ------------------------------------------------------------------
-    def _run_decodes(self) -> int:
+    # scheduling: pick this step's work (and claim blocks) WITHOUT
+    # executing — both execution paths consume the same schedule
+    # ------------------------------------------------------------------
+    def _schedule_decodes(self) -> List[Request]:
         decodes = [r for r in self.running if r.state == State.DECODE]
-        if not decodes:
-            return 0
         bs = self.ecfg.block_size
         # ensure each request has a block for the position it writes
         ok: List[Request] = []
@@ -287,16 +340,73 @@ class Engine:
                 if len(r.block_ids) <= pos // bs:
                     continue                        # starved; retry later
             ok.append(r)
+        return ok
+
+    def _schedule_prefills(self, budget: int
+                           ) -> List[Tuple[Request, int, int]]:
+        bs = self.ecfg.block_size
+        spans: List[Tuple[Request, int, int]] = []
+        for r in self.running:
+            if budget <= 0:
+                break
+            if r.state != State.PREFILL:
+                continue
+            n_prompt = len(r.prompt)
+            lo = r.n_computed
+            hi = min(n_prompt, lo + min(budget,
+                                        self.runner.rcfg.chunk_tokens))
+            # keep chunk boundaries block-aligned except the final chunk
+            if hi < n_prompt:
+                hi = lo + ((hi - lo) // bs) * bs
+                if hi <= lo:
+                    continue
+            if r.t_prefill_start is None:
+                r.t_prefill_start = self.clock
+            budget -= hi - lo
+            spans.append((r, lo, hi))
+        return spans
+
+    # ------------------------------------------------------------------
+    # post-execution bookkeeping shared by both execution paths
+    # ------------------------------------------------------------------
+    def _postprocess_decode(self, r: Request, tok: int) -> None:
+        r.n_computed += 1
+        self._on_block_boundary(r)
+        # append only when at the sampling frontier (after a
+        # preemption the decode path RECOMPUTES known tokens first)
+        if r.n_computed == len(r.all_tokens) and not r.is_finished():
+            r.output_tokens.append(tok)
+
+    def _postprocess_prefill(self, r: Request, lo: int, hi: int,
+                             logits_row: np.ndarray, boundary) -> None:
+        r.n_computed = hi
+        # register every block completed by this chunk (+ snapshots)
+        self._register_prefill_blocks(r, lo, hi, boundary)
+        if hi == len(r.prompt):                     # prefill complete
+            r.state = State.DECODE
+            if r.t_decode_start is None:
+                r.t_decode_start = self.clock
+            if not r.output_tokens:                 # not a re-prefill
+                r.output_tokens.append(int(np.argmax(logits_row)))
+
+    def _adapter_idx(self, r: Request, positions: np.ndarray) -> np.ndarray:
+        return adapter_index_for_positions(
+            positions, r.adapter_slot,
+            r.adapter.kind if r.adapter else None, r.inv_start)
+
+    # ------------------------------------------------------------------
+    # sequential execution (v0-style: one decode batch + one device call
+    # per prefill chunk; the fallback for SSM/hybrid + enc-dec archs)
+    # ------------------------------------------------------------------
+    def _execute_decodes(self, ok: List[Request]) -> None:
         if not ok:
-            return 0
+            return
         tokens = np.array([r.all_tokens[r.n_computed] for r in ok],
                           np.int32)
         positions = np.array([r.n_computed for r in ok], np.int32)
         lengths = positions + 1
         adapter_idx = np.array([
-            adapter_index_for_positions(
-                np.array([r.n_computed]), r.adapter_slot,
-                r.adapter.kind if r.adapter else None, r.inv_start)[0]
+            self._adapter_idx(r, np.array([r.n_computed]))[0]
             for r in ok], np.int32)
         run_slots = np.array([max(r.run_slot, 0) for r in ok], np.int32)
         block_tables = [r.block_ids for r in ok]
@@ -312,38 +422,12 @@ class Engine:
         self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
         nxt = np.argmax(logits, axis=-1)
         for r, t in zip(ok, nxt):
-            r.n_computed += 1
-            self._on_block_boundary(r)
-            # append only when at the sampling frontier (after a
-            # preemption the decode path RECOMPUTES known tokens first)
-            if r.n_computed == len(r.all_tokens) and not r.is_finished():
-                r.output_tokens.append(int(t))
-        return len(ok)
+            self._postprocess_decode(r, int(t))
 
-    # ------------------------------------------------------------------
-    def _run_prefills(self, budget: int) -> int:
-        bs = self.ecfg.block_size
-        n_done = 0
-        for r in self.running:
-            if budget <= 0:
-                break
-            if r.state != State.PREFILL:
-                continue
-            n_prompt = len(r.prompt)
-            lo = r.n_computed
-            hi = min(n_prompt, lo + min(budget,
-                                        self.runner.rcfg.chunk_tokens))
-            # keep chunk boundaries block-aligned except the final chunk
-            if hi < n_prompt:
-                hi = lo + ((hi - lo) // bs) * bs
-                if hi <= lo:
-                    continue
-            positions = np.arange(lo, hi)
-            aidx = adapter_index_for_positions(
-                positions, r.adapter_slot,
-                r.adapter.kind if r.adapter else None, r.inv_start)
-            if r.t_prefill_start is None:
-                r.t_prefill_start = self.clock
+    def _execute_prefills(self,
+                          spans: List[Tuple[Request, int, int]]) -> None:
+        for r, lo, hi in spans:
+            aidx = self._adapter_idx(r, np.arange(lo, hi))
             t0 = time.perf_counter()
             logits, boundary = self.runner.prefill_chunk(
                 input_embeds=r.input_embeds, lo=lo, hi=hi,
@@ -352,18 +436,87 @@ class Engine:
                 xkv=self._xkv.get(r.req_id))
             logits = np.asarray(logits)           # sync
             self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
-            budget -= hi - lo
-            n_done += hi - lo
-            r.n_computed = hi
-            # register every block completed by this chunk (+ snapshots)
-            self._register_prefill_blocks(r, lo, hi, boundary)
-            if hi == n_prompt:                      # prefill complete
-                r.state = State.DECODE
-                if r.t_decode_start is None:
-                    r.t_decode_start = self.clock
-                if not r.output_tokens:             # not a re-prefill
-                    r.output_tokens.append(int(np.argmax(logits)))
-        return n_done
+            self._postprocess_prefill(r, lo, hi, logits, boundary)
+
+    # ------------------------------------------------------------------
+    # unified mixed-batch execution: ALL decode tokens and prefill chunks
+    # of the step packed into one ragged batch → one jitted device call
+    # ------------------------------------------------------------------
+    def _execute_mixed(self, decodes: List[Request],
+                       prefills: List[Tuple[Request, int, int]]) -> None:
+        if not decodes and not prefills:
+            return
+        bs = self.ecfg.block_size
+        reqs = decodes + [r for r, _, _ in prefills]
+        R = len(reqs)
+        T = len(decodes) + sum(hi - lo for _, lo, hi in prefills)
+
+        tok_ids = np.zeros((T,), np.int32)
+        embeds = np.zeros((T, self.cfg.d_model), np.float32)
+        use_embeds = np.zeros((T,), bool)
+        positions = np.zeros((T,), np.int32)
+        adapter_idx = np.zeros((T,), np.int32)
+        req_rows = np.zeros((T,), np.int32)
+        write_bids = np.zeros((T,), np.int32)
+        write_offs = np.zeros((T,), np.int32)
+        out_rows = np.zeros((R,), np.int32)
+        block_tables = [list(r.block_ids) for r in reqs]
+
+        t = 0
+        for i, r in enumerate(decodes):
+            pos = r.n_computed
+            tok_ids[t] = r.all_tokens[pos]
+            positions[t] = pos
+            adapter_idx[t] = self._adapter_idx(r, np.array([pos]))[0]
+            req_rows[t] = i
+            write_bids[t] = r.block_ids[pos // bs]
+            write_offs[t] = pos % bs
+            out_rows[i] = t
+            t += 1
+        for j, (r, lo, hi) in enumerate(prefills):
+            row = len(decodes) + j
+            n = hi - lo
+            sl = slice(t, t + n)
+            pr = np.arange(lo, hi)
+            embeds[sl] = np.asarray(r.input_embeds[lo:hi], np.float32)
+            use_embeds[sl] = True
+            positions[sl] = pr
+            adapter_idx[sl] = self._adapter_idx(r, pr)
+            req_rows[sl] = row
+            bids = np.asarray(r.block_ids, np.int32)
+            write_bids[sl] = bids[pr // bs]
+            write_offs[sl] = pr % bs
+            out_rows[row] = t + n - 1
+            t += n
+
+        mb = MixedBatch(tok_ids=tok_ids, embeds=embeds,
+                        use_embeds=use_embeds, positions=positions,
+                        adapter_idx=adapter_idx, req_rows=req_rows,
+                        write_bids=write_bids, write_offs=write_offs,
+                        block_tables=block_tables, out_rows=out_rows)
+        t0 = time.perf_counter()
+        logits = self.runner.execute_batch(mb)    # one jitted call
+        self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
+        # decode bookkeeping first, then prefill — the same order the
+        # sequential path registers blocks in
+        for i, r in enumerate(decodes):
+            self._postprocess_decode(r, int(np.argmax(logits[i])))
+        for j, (r, lo, hi) in enumerate(prefills):
+            self._postprocess_prefill(r, lo, hi, logits[len(decodes) + j],
+                                      None)
+
+    # ------------------------------------------------------------------
+    def _adopt_canonical(self, r: Request, b: int, h) -> None:
+        """Register block ``b`` of ``r`` under hash ``h``.  When another
+        live block already owns the hash (concurrent identical prefixes),
+        remap the request onto the canonical block and release the
+        duplicate back to the pool instead of keeping both allocated."""
+        bid = r.block_ids[b]
+        canon = self.cache.register_kv_block(h, bid)
+        if canon != bid:
+            self.kv_mgr.acquire(canon)
+            self.kv_mgr.release(bid)
+            r.block_ids[b] = canon
 
     # ------------------------------------------------------------------
     def _register_prefill_blocks(self, r: Request, lo: int, hi: int,
@@ -376,7 +529,7 @@ class Engine:
                 break
             h = r.hashes[b]
             if self.kv_mgr is not None and b < len(r.block_ids):
-                self.cache.register_kv_block(h, r.block_ids[b])
+                self._adopt_canonical(r, b, h)
             if self.st_mgr is not None:
                 # boundary states are per chunk of size bs within [lo, hi)
                 c_idx = b - lo // bs
@@ -410,7 +563,7 @@ class Engine:
             r.hashes = hs
         h = r.hashes[b]
         if self.kv_mgr is not None and b < len(r.block_ids):
-            self.cache.register_kv_block(h, r.block_ids[b])
+            self._adopt_canonical(r, b, h)
         if self.st_mgr is not None and self.st_mgr.lookup(h) is None:
             try:
                 slot = self.st_mgr.allocate()

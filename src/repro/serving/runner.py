@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ATTN, SSM, ModelConfig
 from repro.kernels.ref import paged_attention_ref
+from repro.models import attention as attn_dispatch
 from repro.models import layers as Lyr
 from repro.models import model as M
 from repro.models import ssm as ssm_lib
@@ -52,6 +53,7 @@ class RunnerConfig:
     max_running: int = 9            # incl. 1 reserved dump slot
     num_state_slots: int = 65       # incl. 1 reserved dump slot
     chunk_tokens: int = 64          # max prefill chunk (multiple of bs)
+    mixed_attn_impl: str = "ref"    # "ref" | "pallas" | "pallas_interpret"
 
 
 @dataclass(frozen=True)
@@ -63,6 +65,41 @@ class RunnerSpec:
     window: int
     kinds: Tuple[str, ...]
     rt: Runtime = Runtime()
+    attn_impl: str = "ref"
+
+
+@dataclass
+class MixedBatch:
+    """One engine step's ragged token batch: all scheduled decode tokens
+    plus all scheduled prefill chunks, packed along a single token axis
+    with per-token metadata rows (vLLM v1-style single mixed batch).
+
+    Per-token arrays (T,):
+      tok_ids     — token id (embedded in-step; ignored where use_embeds)
+      use_embeds  — row comes from ``embeds`` instead (prefill rows,
+                    incl. multimodal prefix embeds)
+      positions   — absolute position in the request
+      adapter_idx — activation-aware adapter index (0 = base)
+      req_rows    — token → request row in the per-request arrays
+      write_bids/write_offs — physical (block, offset) this token's K/V
+                    is written to
+
+    Per-request:
+      block_tables — physical block ids (ragged list-of-lists)
+      out_rows     — token index whose hidden state yields the request's
+                    logits (chunk tail for prefill, the token itself for
+                    decode)
+    """
+    tok_ids: np.ndarray
+    embeds: np.ndarray                       # (T, d)
+    use_embeds: np.ndarray
+    positions: np.ndarray
+    adapter_idx: np.ndarray
+    req_rows: np.ndarray
+    write_bids: np.ndarray
+    write_offs: np.ndarray
+    block_tables: List[List[int]]
+    out_rows: np.ndarray
 
 
 def _chunk_attention(q, past_k, past_v, past_len, new_k, new_v,
@@ -211,6 +248,46 @@ def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
 
 
 @partial(jax.jit, static_argnums=0)
+def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
+                tok_ids, embeds, use_embeds, positions, q_lens,
+                adapter_idx, block_tables, req_rows, write_bids,
+                write_offs, out_rows):
+    """One jitted step over the whole mixed batch (attention-only archs).
+
+    All K/V rows are written to the paged pool first, then every token
+    attends over its request's blocks through the ragged paged-attention
+    path — intra-chunk causality is just the q_lens mask, so prefill
+    chunks and decode tokens share one code path and one device call.
+    """
+    cfg, rt = spec.cfg, spec.rt
+    x = jnp.where(use_embeds[:, None], embeds,
+                  params["embed"]["tok"][tok_ids])[None]     # (1, Tb, d)
+    pos2 = positions[None]                                   # (1, Tb)
+    aidx2 = adapter_idx[None]
+    ai = 0
+    layers_params = [lp for _, lp in M.iter_layers(params, cfg)]
+    for li, kind in enumerate(spec.kinds):
+        assert kind == ATTN, "mixed batch serves attention-only archs"
+        lp = layers_params[li]
+        al = adapter_layers[li]
+        h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = Lyr.qkv_project(lp["attn"], cfg, h, al, aidx2)
+        q = Lyr.apply_rope(q, pos2, cfg.rope_theta)
+        k = Lyr.apply_rope(k, pos2, cfg.rope_theta)
+        k_pool = k_pool.at[ai, write_bids, write_offs].set(k[0])
+        v_pool = v_pool.at[ai, write_bids, write_offs].set(v[0])
+        o = attn_dispatch.ragged_paged_attention(
+            q[0], k_pool[ai], v_pool[ai], block_tables, req_rows,
+            q_lens, window=spec.window, impl=spec.attn_impl)
+        x = x + Lyr.out_project(lp["attn"], cfg, o[None])
+        x, _ = M.mlp_sublayer(lp, cfg, rt, x)
+        ai += 1
+    x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = M.logits_for(params, cfg, x[0][out_rows])       # (Rb, V)
+    return k_pool, v_pool, logits
+
+
+@partial(jax.jit, static_argnums=0)
 def _encode_impl(spec: RunnerSpec, params, frames):
     cfg = spec.cfg
     enc_out = M._run_encoder(params["encoder"], cfg, spec.rt, frames[None])
@@ -248,7 +325,12 @@ class ModelRunner:
         self._spec = RunnerSpec(cfg=cfg, block_size=rcfg.block_size,
                                 num_blocks=rcfg.num_blocks,
                                 window=self.window,
-                                kinds=tuple(self.kinds), rt=rt)
+                                kinds=tuple(self.kinds), rt=rt,
+                                attn_impl=rcfg.mixed_attn_impl)
+        # device-call accounting (what benchmarks/bench_mixed_batch.py
+        # reports): one entry per jitted step dispatched
+        self.call_counts = {"prefill_chunk": 0, "decode_batch": 0,
+                            "mixed_step": 0, "encode": 0}
 
         # per-layer adapter slices aligned with layer order
         self.adapter_layers: List[Any] = []
@@ -305,7 +387,67 @@ class ModelRunner:
     # encoder (whisper)
     # ------------------------------------------------------------------
     def encode(self, frames: np.ndarray):
+        self.call_counts["encode"] += 1
         return _encode_impl(self._spec, self.params, jnp.asarray(frames))
+
+    @property
+    def num_device_calls(self) -> int:
+        return sum(self.call_counts.values())
+
+    # ------------------------------------------------------------------
+    # unified mixed-batch step (decode tokens + prefill chunks, one call)
+    # ------------------------------------------------------------------
+    def execute_batch(self, mb: MixedBatch) -> np.ndarray:
+        """Execute one mixed ragged batch in a single jitted device call.
+
+        Returns logits (R, V): one row per request in the batch, taken at
+        that request's last packed token.
+        """
+        rc = self.rcfg
+        T = len(mb.tok_ids)
+        R = len(mb.block_tables)
+        dump_block = rc.num_blocks - 1
+        # bucketed shapes (powers of two) bound the jit trace count
+        Tb = next_pow2(max(T, 1))
+        Rb = next_pow2(max(R, 1))
+        nbb = next_pow2(max(max((len(t) for t in mb.block_tables),
+                                default=1), 1))
+
+        dtype = Lyr.dtype_of(self.cfg)
+        tok = np.zeros((Tb,), np.int32)
+        tok[:T] = mb.tok_ids
+        emb = np.zeros((Tb, self.cfg.d_model), np.float32)
+        emb[:T] = np.asarray(mb.embeds, np.float32)
+        use = np.zeros((Tb,), bool)
+        use[:T] = mb.use_embeds
+        pos = np.zeros((Tb,), np.int32)
+        pos[:T] = mb.positions
+        # causal length per token; 0 fully masks padded rows
+        qln = np.zeros((Tb,), np.int32)
+        qln[:T] = mb.positions + 1
+        ad = np.zeros((Tb,), np.int32)
+        ad[:T] = mb.adapter_idx
+        rows = np.full((Tb,), Rb - 1, np.int32)
+        rows[:T] = mb.req_rows
+        wb = np.full((Tb,), dump_block, np.int32)
+        wb[:T] = mb.write_bids
+        wo = np.zeros((Tb,), np.int32)
+        wo[:T] = mb.write_offs
+        bt = np.full((Rb, nbb), dump_block, np.int32)
+        for i, t in enumerate(mb.block_tables):
+            bt[i, :len(t)] = t
+        out_rows = np.zeros((Rb,), np.int32)
+        out_rows[:R] = mb.out_rows
+
+        self.call_counts["mixed_step"] += 1
+        self.k_pool, self.v_pool, logits = _mixed_impl(
+            self._spec, self.params, self.adapter_layers, self.k_pool,
+            self.v_pool, jnp.asarray(tok),
+            jnp.asarray(emb).astype(dtype), jnp.asarray(use),
+            jnp.asarray(pos), jnp.asarray(qln), jnp.asarray(ad),
+            jnp.asarray(bt), jnp.asarray(rows), jnp.asarray(wb),
+            jnp.asarray(wo), jnp.asarray(out_rows))
+        return np.asarray(logits[:R])
 
     # ------------------------------------------------------------------
     # prefill chunk
@@ -328,6 +470,7 @@ class ModelRunner:
         bt[:len(block_ids)] = block_ids
         aidx = np.zeros((1, Cb), np.int32)
         aidx[0, :C] = adapter_idx_row
+        self.call_counts["prefill_chunk"] += 1
         (self.k_pool, self.v_pool, live_ssm, live_conv, b_ssm, b_conv,
          logits) = _prefill_impl(
             self._spec, self.params, self.adapter_layers, self.k_pool,
@@ -387,6 +530,7 @@ class ModelRunner:
                 xk = xk.at[i].set(k_)
                 xv = xv.at[i].set(v_)
             xkv = (xk, xv)
+        self.call_counts["decode_batch"] += 1
         (self.k_pool, self.v_pool, live_ssm, live_conv,
          logits) = _decode_impl(
             self._spec, self.params, self.adapter_layers, self.k_pool,

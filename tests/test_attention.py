@@ -1,9 +1,11 @@
 """Blocked (flash-style) attention vs naive reference + properties."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.models.attention import (decode_attention, flash_attention,

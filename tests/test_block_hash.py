@@ -4,8 +4,10 @@ These encode the paper's §3 semantics (Fig. 3): which blocks are
 interchangeable between the base model, aLoRA adapters, and vanilla
 LoRA adapters.
 """
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.block_hash import (AdapterKey, block_extra, hash_block,

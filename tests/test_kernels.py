@@ -77,6 +77,52 @@ def test_paged_attention_sweep(B, H, KV, hd, NB, bs, nb, window, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("T,R,H,KV,hd,NB,bs,nb,window", [
+    (6, 3, 8, 2, 32, 16, 8, 4, 0),     # mixed tokens-per-request
+    (5, 2, 4, 4, 16, 8, 4, 2, 8),      # MHA + window
+    (9, 4, 4, 1, 8, 8, 4, 4, 0),       # single kv head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_paged_attention_sweep(T, R, H, KV, hd, NB, bs, nb,
+                                      window, dtype):
+    """Mixed-batch kernel vs jnp oracle: tokens of several requests with
+    ragged causal lengths in one launch."""
+    from repro.kernels.ops import (ragged_paged_attention_op,
+                                   ragged_paged_attention_ref)
+    ks = jax.random.split(KEY, 6)
+    q = jax.random.normal(ks[0], (T, H, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (NB, bs, KV, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (NB, bs, KV, hd)).astype(dtype)
+    bt = jax.random.randint(ks[3], (R, nb), 0, NB)
+    rows = jax.random.randint(ks[4], (T,), 0, R)
+    ln = jax.random.randint(ks[5], (T,), 1, nb * bs + 1)
+    got = ragged_paged_attention_op(q, kp, vp, bt, rows, ln,
+                                    window=window, interpret=True)
+    want = ragged_paged_attention_ref(q, kp, vp, bt, rows, ln,
+                                      window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ragged_matches_paged_on_decode_batch():
+    """With one token per request the ragged path degenerates to plain
+    paged decode attention — both oracles must agree exactly."""
+    from repro.kernels.ops import ragged_paged_attention_ref
+    B, H, KV, hd, NB, bs, nb = 3, 8, 2, 32, 16, 8, 4
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (NB, bs, KV, hd))
+    vp = jax.random.normal(ks[2], (NB, bs, KV, hd))
+    bt = jax.random.randint(ks[3], (B, nb), 0, NB)
+    ln = jax.random.randint(ks[4], (B,), 1, nb * bs + 1)
+    got = ragged_paged_attention_ref(q, kp, vp, bt, jnp.arange(B), ln)
+    want = paged_attention_ref(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_paged_attention_ignores_padding_blocks():
     """Entries of the block table beyond `lengths` must not matter."""
     B, H, KV, hd, NB, bs, nb = 1, 4, 2, 16, 8, 4, 4

@@ -1,9 +1,11 @@
 """Mamba2 SSD: chunked-scan algebra, state carry, masking, boundaries."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_reduced
