@@ -2,12 +2,27 @@
 
 A step with K prefilling requests used to dispatch K prefill_chunk calls
 plus one decode_batch call; the unified path packs every scheduled token
-(decode singletons + prefill chunks) into ONE ragged jitted step.  This
-section measures exactly that: device-calls/step and step latency for
-the same workload under both execution modes, with a warmup round first
-so measured numbers are compute, not compilation.
+(decode singletons + prefill chunks) into ONE ragged jitted step — for
+EVERY architecture family (attention, SSM/hybrid via the ragged SSD
+scan, encoder-decoder).  This section measures exactly that:
+device-calls/step and step latency for the same workload under both
+execution modes, with a warmup round first so measured numbers are
+compute, not compilation.
+
+Host-side batch assembly goes through the runner's persistent
+capacity-doubling buffers (``HostBufferPool``); the
+``assembly_us_per_step`` metric isolates that host cost.  Set
+``REPRO_HOST_BUF_REUSE=0`` to re-measure with per-step reallocation (the
+pre-pool behavior) for an A/B of the ROADMAP "pinned buffer" item.
+
+``--arch`` selects any registered architecture (default: the paper's
+granite base model); ``--smoke`` shrinks the workload for CI.  CI runs
+``--arch mamba2-2.7b --smoke`` as the tiny-SSM smoke leg and checks the
+1.0-device-calls/step invariant this module asserts for mixed mode.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -19,16 +34,24 @@ PROMPT_LEN = 72
 GEN_LEN = 16
 
 
-def _workload(eng, seed: int):
+def _workload(eng, seed: int, concurrency: int, prompt_len: int,
+              gen_len: int):
+    cfg = eng.cfg
     rng = np.random.RandomState(seed)
     # staggered arrivals keep prefills and decodes overlapping, so most
     # steps genuinely mix both phases
     rids = []
-    for i in range(CONCURRENCY):
-        prompt = list(rng.randint(10, 400, PROMPT_LEN + 8 * (i % 3)))
-        rids.append(eng.submit(prompt, GEN_LEN,
+    for i in range(concurrency):
+        prompt = list(rng.randint(10, min(400, cfg.vocab_size),
+                                  prompt_len + 8 * (i % 3)))
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw = dict(frame_embeds=rng.randn(
+                cfg.encoder_seq_len, cfg.d_model).astype(np.float32),
+                salt=(seed, i))
+        rids.append(eng.submit(prompt, gen_len,
                                adapter_name="ad0" if i % 2 else None,
-                               arrival_time=1e-9 * i))
+                               arrival_time=1e-9 * i, **kw))
     steps, mixed_steps, step_times = 0, 0, []
     while eng.pending or eng.waiting or eng.running:
         dt = eng.step()
@@ -41,26 +64,46 @@ def _workload(eng, seed: int):
     return rids, steps, mixed_steps, step_times
 
 
-def run():
+def run(arch: str = "granite-3.2-8b", smoke: bool = False):
+    concurrency = 3 if smoke else CONCURRENCY
+    prompt_len = 24 if smoke else PROMPT_LEN
+    gen_len = 8 if smoke else GEN_LEN
     for mode in ("sequential", "mixed"):
         for seed in (999, 7):                     # warmup + measured
             eng = make_engine(
-                "alora",
+                "alora", arch=arch,
                 ecfg=EngineConfig(max_running=8, max_batched_tokens=128,
                                   execution_mode=mode))
-            rids, steps, mixed_steps, times = _workload(eng, seed)
+            rids, steps, mixed_steps, times = _workload(
+                eng, seed, concurrency, prompt_len, gen_len)
         calls = eng.runner.num_device_calls
         out_toks = sum(len(eng.request(r).output_tokens) for r in rids)
-        assert out_toks == sum(GEN_LEN for _ in rids)
-        emit(f"mixed_batch/{mode}/step_latency",
+        assert out_toks == sum(gen_len for _ in rids)
+        if mode == "mixed" and not eng.cfg.is_encoder_decoder:
+            # the unified-step invariant: one jitted call per work step
+            assert calls == steps, (calls, steps)
+        emit(f"mixed_batch/{arch}/{mode}/step_latency",
              float(np.mean(times)) * 1e6,
              f"p50={np.median(times)*1e6:.0f}us "
              f"p99={np.percentile(times, 99)*1e6:.0f}us")
-        emit(f"mixed_batch/{mode}/device_calls_per_step",
+        emit(f"mixed_batch/{arch}/{mode}/device_calls_per_step",
              calls / max(steps, 1),
              f"calls={calls} steps={steps} both_phase_steps={mixed_steps} "
              f"counts={eng.runner.call_counts}")
+        if mode == "mixed":
+            # engine-side packing + runner-side bucket padding/stacking —
+            # everything the HostBufferPool covers
+            t_asm = eng.t_assembly + eng.runner.t_assembly
+            emit(f"mixed_batch/{arch}/{mode}/assembly_us_per_step",
+                 t_asm / max(steps, 1) * 1e6,
+                 f"host batch-pack time (persistent buffers; set "
+                 f"REPRO_HOST_BUF_REUSE=0 for the realloc baseline)")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3.2-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI smoke runs")
+    args = ap.parse_args()
+    run(arch=args.arch, smoke=args.smoke)

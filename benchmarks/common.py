@@ -26,25 +26,27 @@ ARCH = "granite-3.2-8b"
 _cache: Dict = {}
 
 
-def model():
-    if "m" not in _cache:
-        cfg = get_reduced(ARCH)
-        _cache["m"] = (cfg, init_params(KEY, cfg))
-    return _cache["m"]
+def model(arch: str = ARCH):
+    key = ("m", arch)
+    if key not in _cache:
+        cfg = get_reduced(arch)
+        _cache[key] = (cfg, init_params(KEY, cfg))
+    return _cache[key]
 
 
 def make_engine(kind: str, n_adapters: int = 1,
-                ecfg: Optional[EngineConfig] = None) -> Engine:
-    cfg, params = model()
+                ecfg: Optional[EngineConfig] = None,
+                arch: str = ARCH) -> Engine:
+    cfg, params = model(arch)
     rank = PAPER_ALORA_RANK if kind == "alora" else PAPER_LORA_RANK
     ads = []
     for i in range(n_adapters):
         inv = tuple(x + i for x in INV) if kind == "alora" else None
         spec = AdapterSpec(f"ad{i}", rank=rank, invocation_tokens=inv)
-        if ("w", rank, i) not in _cache:
-            _cache[("w", rank, i)] = init_adapter_weights(
+        if (arch, "w", rank, i) not in _cache:
+            _cache[(arch, "w", rank, i)] = init_adapter_weights(
                 jax.random.key(100 + i), cfg, rank)
-        ads.append((spec, _cache[("w", rank, i)]))
+        ads.append((spec, _cache[(arch, "w", rank, i)]))
     return Engine(cfg, params, adapters=ads,
                   engine_cfg=ecfg or EngineConfig())
 

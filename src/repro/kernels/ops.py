@@ -92,8 +92,42 @@ def ssd_chunk_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
     return y[:, :S], st
 
 
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ragged_ssd_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
+                       dA: jax.Array, dt: jax.Array, seg_ids: jax.Array,
+                       seg_starts: jax.Array, slot_rows: jax.Array,
+                       init_states: jax.Array, *, chunk: int = 64,
+                       interpret: Optional[bool] = None):
+    """Padded/jitted ragged SSD scan over a packed token axis.
+
+    Pads T to a chunk multiple with dA=dt=0 (decay 1, zero input ⇒ carry
+    invariant) and seg_starts=0 (padding continues the trailing segment,
+    whose emitted rows the caller never gathers)."""
+    from repro.kernels.ssd_chunk import ragged_ssd_chunk_scan
+    if interpret is None:
+        interpret = not _on_tpu()
+    T = x.shape[0]
+    ch = min(chunk, max(T, 8))
+    Tp = ((T + ch - 1) // ch) * ch
+    pad = Tp - T
+    xp = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+    Bp = jnp.pad(B, ((0, pad), (0, 0), (0, 0)))
+    Cp = jnp.pad(C, ((0, pad), (0, 0), (0, 0)))
+    dAp = jnp.pad(dA, ((0, pad), (0, 0)))
+    dtp = jnp.pad(dt, ((0, pad), (0, 0)))
+    sidp = jnp.pad(seg_ids, (0, pad), mode="edge") if pad else seg_ids
+    stp = jnp.pad(seg_starts.astype(jnp.int32), (0, pad))
+    slp = jnp.pad(slot_rows, (0, pad), mode="edge") if pad else slot_rows
+    y, st = ragged_ssd_chunk_scan(xp, Bp, Cp, dAp, dtp, sidp, stp, slp,
+                                  init_states, chunk=ch,
+                                  interpret=interpret)
+    return y[:T], st[:T]
+
+
 # pure-jnp oracles re-exported for benchmarks/tests
 paged_attention_ref = ref.paged_attention_ref
 ragged_paged_attention_ref = ref.ragged_paged_attention_ref
 alora_qkv_ref = ref.alora_qkv_ref
 ssd_chunk_ref = ref.ssd_chunk_ref
+ragged_ssd_scan_ref = ref.ragged_ssd_scan_ref
+packed_cross_attention_ref = ref.packed_cross_attention_ref

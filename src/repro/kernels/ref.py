@@ -122,6 +122,74 @@ def ssd_chunk_ref(x: jax.Array, B: jax.Array, C: jax.Array,
     return ys.swapaxes(0, 1).astype(x.dtype), final
 
 
+def ragged_ssd_scan_ref(x: jax.Array, B: jax.Array, C: jax.Array,
+                        dA: jax.Array, dt: jax.Array,
+                        seg_starts: jax.Array, slot_rows: jax.Array,
+                        init_states: jax.Array):
+    """Ragged (packed-axis) SSD recurrence oracle — the SSM analogue of
+    :func:`ragged_paged_attention_ref`.
+
+    The mixed serving step packs every scheduled token (decode singletons
+    and prefill chunks alike) along one token axis; each request's tokens
+    form a contiguous segment.  At a segment start the recurrent state is
+    gathered from that request's live-state slot; inside a segment the
+    per-token recurrence runs unchanged:
+
+      state_t = exp(dA_t)·state_{t-1} + dt_t·(B_t ⊗ x_t);  y_t = C_t·state_t
+
+    x: (T, H, P); B/C: (T, H, N); dA/dt: (T, H) fp32;
+    seg_starts:  (T,) bool  — token is the first of its request's segment
+    slot_rows:   (T,) int32 — token → row in ``init_states``
+    init_states: (S, H, N, P) fp32 — per-slot incoming recurrent state
+
+    Returns (y (T,H,P) in x.dtype, states (T,H,N,P) fp32): the POST-token
+    state at every packed position.  Callers gather segment-final rows for
+    the live-state scatter-back and block-boundary rows for prefix-cache
+    state snapshots (boundary-only emission is the production-kernel
+    optimization; the ref keeps every row for testability).
+    """
+    def step(state, inp):
+        x_t, b_t, c_t, da_t, dt_t, st_t, sl_t = inp
+        entry = jnp.where(st_t, init_states[sl_t], state)
+        state = jnp.exp(da_t)[..., None, None] * entry + \
+            jnp.einsum("hn,hp->hnp", b_t * dt_t[..., None], x_t)
+        y_t = jnp.einsum("hn,hnp->hp", c_t, state)
+        return state, (y_t, state)
+
+    T, H, P = x.shape
+    N = B.shape[-1]
+    xs = (x.astype(jnp.float32), B.astype(jnp.float32),
+          C.astype(jnp.float32), dA, dt, seg_starts, slot_rows)
+    state0 = jnp.zeros((H, N, P), jnp.float32)
+    _, (ys, states) = jax.lax.scan(step, state0, xs)
+    return ys.astype(x.dtype), states
+
+
+def packed_cross_attention_ref(q: jax.Array, xk: jax.Array,
+                               xv: jax.Array) -> jax.Array:
+    """Per-token encoder-decoder cross attention (non-causal, unmasked).
+
+    The mixed-batch analogue of ``models.attention.cross_attention``: one
+    query row per packed token, each attending over its OWN request's
+    projected encoder K/V (gathered by ``req_rows`` before the call).
+
+    q:     (T, H, hd)
+    xk/xv: (T, Se, KV, hd)
+
+    Returns (T, H, hd).
+    """
+    T, H, hd = q.shape
+    KV = xk.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qr = q.reshape(T, KV, G, hd)
+    s = jnp.einsum("tkgd,tskd->tkgs", qr, xk,
+                   preferred_element_type=jnp.float32) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("tkgs,tskd->tkgd", p, xv.astype(jnp.float32))
+    return out.reshape(T, H, hd).astype(q.dtype)
+
+
 def alora_qkv_ref(x: jax.Array, w: jax.Array, a_stack: jax.Array,
                   b_stack: jax.Array, adapter_idx: jax.Array) -> jax.Array:
     """Fused base-projection + activation-aware masked low-rank delta.

@@ -112,3 +112,114 @@ def ssd_chunk_scan(x: jax.Array, B: jax.Array, C: jax.Array,
         interpret=interpret,
     )(x, B, C, dA, dt)
     return y, st
+
+
+# ---------------------------------------------------------------------------
+# Ragged (packed-axis) variant — the mixed serving step's SSD scan
+# ---------------------------------------------------------------------------
+def _ragged_ssd_kernel(x_ref, b_ref, c_ref, da_ref, dt_ref, sid_ref,
+                       start_ref, slot_ref, init_ref, y_ref, st_ref,
+                       state_scr, *, Q: int):
+    """Segment-boundary-aware SSD chunk over the PACKED token axis.
+
+    One chunk may span several request segments: the decay matrix is
+    additionally masked to same-segment pairs, and each token's entry
+    state is either the scratch carry (segment spans the chunk boundary)
+    or a row of the live-state pool gathered at the segment's in-chunk
+    start.  Emits the post-token state at every position (the interpret-
+    mode contract; a production TPU kernel would emit only block-boundary
+    rows and fold y into the three-matmul form of ``_ssd_kernel``).
+    """
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[:, 0].astype(jnp.float32)               # (Q, P)
+    B = b_ref[:, 0].astype(jnp.float32)               # (Q, N)
+    C = c_ref[:, 0].astype(jnp.float32)               # (Q, N)
+    dA = da_ref[:, 0]                                 # (Q,)
+    dt = dt_ref[:, 0]                                 # (Q,)
+    sid = sid_ref[...]                                # (Q,) int32
+    is_start = start_ref[...]                         # (Q,) int32
+    slots = slot_ref[...]                             # (Q,) int32
+    init_states = init_ref[:, 0].astype(jnp.float32)  # (S, N, P)
+    N, P = state_scr.shape
+
+    csum = jnp.cumsum(dA)                             # (Q,)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    same = sid[:, None] == sid[None, :]
+    # intra-chunk state contributions: SW[q,k] = e^{csum_q - csum_k}·dt_k
+    # over same-segment causal pairs, applied to B_k ⊗ x_k (one Q×Q MXU
+    # matmul over the flattened (N·P) state)
+    SW = jnp.where((qi >= ki) & same,
+                   jnp.exp(csum[:, None] - csum[None, :]), 0.0) * dt[None, :]
+    Bx = (B[:, :, None] * x[:, None, :]).reshape(Q, N * P)
+    states = jnp.dot(SW, Bx,
+                     preferred_element_type=jnp.float32).reshape(Q, N, P)
+    # entry states: scratch carry, or the pool row gathered at the most
+    # recent in-chunk segment start
+    tok = jax.lax.broadcasted_iota(jnp.int32, (Q,), 0)
+    run_start = jax.lax.cummax(jnp.where(is_start > 0, tok, -1))
+    has_start = run_start >= 0
+    rs = jnp.maximum(run_start, 0)
+    e0 = jnp.where(has_start, csum[rs] - dA[rs], 0.0)
+    entry = jnp.where(has_start[:, None, None],
+                      init_states[slots[rs]], state_scr[...])
+    states = states + jnp.exp(csum - e0)[:, None, None] * entry
+    y = jnp.einsum("qn,qnp->qp", C, states)
+    state_scr[...] = states[Q - 1]
+    y_ref[:, 0] = y.astype(y_ref.dtype)
+    st_ref[:, 0] = states.astype(st_ref.dtype)
+
+
+def ragged_ssd_chunk_scan(x: jax.Array, B: jax.Array, C: jax.Array,
+                          dA: jax.Array, dt: jax.Array, seg_ids: jax.Array,
+                          seg_starts: jax.Array, slot_rows: jax.Array,
+                          init_states: jax.Array, *, chunk: int = 64,
+                          interpret: bool = False):
+    """Ragged SSD scan over a packed token axis (mixed serving batch).
+
+    x: (T, H, P); B/C: (T, H, N); dA/dt: (T, H) fp32; seg_ids /
+    seg_starts / slot_rows: (T,) int32; init_states: (S, H, N, P) fp32.
+    T % chunk == 0 (``repro.kernels.ops.ragged_ssd_scan_op`` auto-pads).
+    Returns (y (T,H,P), states (T,H,N,P) fp32 — post-token states).
+    Matches ``repro.kernels.ref.ragged_ssd_scan_ref``.
+    """
+    T, H, P = x.shape
+    N = B.shape[-1]
+    S = init_states.shape[0]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    grid = (H, nc)                                    # chunk innermost
+
+    kernel = functools.partial(_ragged_ssd_kernel, Q=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, 1, P), lambda h, c: (c, h, 0)),   # x
+            pl.BlockSpec((chunk, 1, N), lambda h, c: (c, h, 0)),   # B
+            pl.BlockSpec((chunk, 1, N), lambda h, c: (c, h, 0)),   # C
+            pl.BlockSpec((chunk, 1), lambda h, c: (c, h)),         # dA
+            pl.BlockSpec((chunk, 1), lambda h, c: (c, h)),         # dt
+            pl.BlockSpec((chunk,), lambda h, c: (c,)),             # seg_ids
+            pl.BlockSpec((chunk,), lambda h, c: (c,)),             # starts
+            pl.BlockSpec((chunk,), lambda h, c: (c,)),             # slots
+            pl.BlockSpec((S, 1, N, P), lambda h, c: (0, h, 0, 0)),  # init
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk, 1, P), lambda h, c: (c, h, 0)),   # y
+            pl.BlockSpec((chunk, 1, N, P),
+                         lambda h, c: (c, h, 0, 0)),               # states
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((T, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, B, C, dA, dt, seg_ids, seg_starts, slot_rows, init_states)
+    return y, st

@@ -219,6 +219,127 @@ def ssd_forward(p: Params, cfg: ModelConfig, x: jax.Array,
         (boundary_ssm, boundary_conv)
 
 
+def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
+                       live_ssm: jax.Array, live_conv: jax.Array,
+                       tok_slots: jax.Array, row_cols: jax.Array,
+                       seg_ids: jax.Array, snap_rows: jax.Array,
+                       last_rows: jax.Array, row_slots: jax.Array,
+                       alora: Optional[Params] = None,
+                       adapter_idx: Optional[jax.Array] = None,
+                       impl: str = "ref"):
+    """One SSM sublayer over a MIXED RAGGED batch (the unified serving
+    step): every scheduled token — decode singletons and prefill chunks
+    alike — packed along one token axis, each request's tokens forming a
+    contiguous segment that continues from that request's live recurrent
+    state.
+
+    x:         (T, d_model) packed hidden rows
+    live_ssm:  (MR, nh, N, P) fp32 — per-run-slot recurrent state
+    live_conv: (MR, W-1, ch)       — per-run-slot raw conv window
+    tok_slots: (T,) int32 — token → its request's run slot
+    row_cols:  (T,) int32 — token's offset within its segment (0 = start)
+    seg_ids:   (T,) int32 — token → request row (contiguous segments)
+    snap_rows: (Cb,) int32 — packed indices of block-boundary tokens
+               whose post-token state feeds the prefix cache
+    last_rows: (R,) int32 — packed index of each request's final token
+    row_slots: (R,) int32 — run slot per request row (scatter-back)
+    impl:      "ref" (packed-axis jnp scan) | "pallas" | "pallas_interpret"
+
+    Returns (y (T, d_model), new live_ssm, new live_conv,
+             snap_ssm (Cb, nh, N, P) fp32, snap_conv (Cb, W-1, ch)).
+    """
+    s = cfg.ssm
+    T = x.shape[0]
+    d_inner, nh, conv_ch = ssm_dims(cfg)
+    G, N, P = s.ngroups, s.state_dim, s.head_dim
+    hpg = nh // G
+    W = s.conv_width
+
+    zxbcdt = x @ p["in_proj"]
+    if alora is not None:
+        from repro.models.layers import lora_delta
+        zxbcdt = zxbcdt + lora_delta(x, alora["a"], alora["b"], adapter_idx)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dtr = zxbcdt[..., d_inner + conv_ch:]              # (T, nh)
+
+    # ---- ragged causal conv -----------------------------------------------
+    # Each token's W-wide window spans the previous raw inputs OF ITS OWN
+    # SEGMENT; positions before the segment start come from the request's
+    # live conv window.  Window col (relative) col' = col - (W-1) + w maps
+    # to packed row t - (W-1) + w when col' >= 0 (contiguity), else to
+    # live_conv[slot, col' + W-1].
+    wj = jnp.arange(W)
+    colp = row_cols[:, None] - (W - 1) + wj[None, :]          # (T, W)
+    pack_idx = jnp.clip(jnp.arange(T)[:, None] - (W - 1) + wj[None, :],
+                        0, T - 1)
+    from_pack = xBC[pack_idx]                                 # (T, W, ch)
+    conv_rows = live_conv[tok_slots]                          # (T, W-1, ch)
+    sidx = jnp.clip(row_cols[:, None] + wj[None, :], 0, W - 2)
+    from_state = jnp.take_along_axis(conv_rows, sidx[..., None], axis=1)
+    win = jnp.where((colp >= 0)[..., None], from_pack,
+                    from_state.astype(xBC.dtype))             # (T, W, ch)
+    conv_out = jnp.einsum("twc,wc->tc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) \
+        + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+
+    # new conv window per request: raw inputs ending at its last token
+    jr = jnp.arange(W - 1)
+    span = row_cols[last_rows] + 1                            # (R,)
+    colp2 = span[:, None] - (W - 1) + jr[None, :]
+    from_pack2 = xBC[jnp.clip(last_rows[:, None] - (W - 2) + jr[None, :],
+                              0, T - 1)]
+    conv_rows2 = live_conv[row_slots]                         # (R, W-1, ch)
+    sidx2 = jnp.clip(span[:, None] + jr[None, :], 0, W - 2)
+    from_state2 = jnp.take_along_axis(conv_rows2, sidx2[..., None], axis=1)
+    new_rows = jnp.where((colp2 >= 0)[..., None],
+                         from_pack2.astype(live_conv.dtype), from_state2)
+    new_live_conv = live_conv.at[row_slots].set(new_rows)
+
+    # snapshot conv windows: raw inputs ending AT each boundary token
+    csnap = row_cols[snap_rows]
+    colp3 = csnap[:, None] - (W - 2) + jr[None, :]
+    from_pack3 = xBC[jnp.clip(snap_rows[:, None] - (W - 2) + jr[None, :],
+                              0, T - 1)]
+    conv_rows3 = live_conv[tok_slots[snap_rows]]
+    sidx3 = jnp.clip(csnap[:, None] + 1 + jr[None, :], 0, W - 2)
+    from_state3 = jnp.take_along_axis(conv_rows3, sidx3[..., None], axis=1)
+    snap_conv = jnp.where((colp3 >= 0)[..., None],
+                          from_pack3.astype(live_conv.dtype), from_state3)
+
+    # ---- ragged SSD scan --------------------------------------------------
+    xs = conv_out[..., :d_inner].reshape(T, nh, P)
+    Bm = conv_out[..., d_inner:d_inner + G * N].reshape(T, G, N)
+    Cm = conv_out[..., d_inner + G * N:].reshape(T, G, N)
+    Bh = jnp.repeat(Bm, hpg, axis=1)                          # (T, nh, N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    dA = dtv * (-jnp.exp(p["A_log"]))                         # (T, nh)
+
+    seg_starts = row_cols == 0
+    if impl == "ref":
+        from repro.kernels.ref import ragged_ssd_scan_ref
+        y, states = ragged_ssd_scan_ref(xs, Bh, Ch, dA, dtv, seg_starts,
+                                        tok_slots, live_ssm)
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ops import ragged_ssd_scan_op
+        y, states = ragged_ssd_scan_op(
+            xs, Bh, Ch, dA, dtv, seg_ids, seg_starts, tok_slots, live_ssm,
+            interpret=(impl == "pallas_interpret"))
+    else:
+        raise ValueError(f"unknown ragged-SSD impl {impl!r}: expected "
+                         "'ref', 'pallas' or 'pallas_interpret'")
+    new_live_ssm = live_ssm.at[row_slots].set(states[last_rows])
+    snap_ssm = states[snap_rows]                              # (Cb, ...)
+
+    y = y.astype(jnp.float32) + p["D"][:, None] * xs
+    y = y.reshape(T, d_inner)
+    y = _rmsnorm_gated(y, z, p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(jnp.float32)).astype(x.dtype)
+    return out, new_live_ssm, new_live_conv, snap_ssm, snap_conv
+
+
 def ssd_decode_step(p: Params, cfg: ModelConfig, x: jax.Array,
                     ssm_state: jax.Array, conv_state: jax.Array,
                     alora: Optional[Params] = None,

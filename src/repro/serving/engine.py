@@ -35,7 +35,8 @@ from repro.configs.base import ATTN, ModelConfig
 from repro.core.activation_mask import (adapter_index_for_positions,
                                         find_invocation_start)
 from repro.core.alora import AdapterSpec, stack_adapters
-from repro.core.block_hash import request_block_hashes
+from repro.core.block_hash import (block_extra, hash_block,
+                                   request_block_hashes)
 from repro.core.kv_manager import BlockManager, OutOfBlocks
 from repro.core.prefix_cache import PrefixCache
 from repro.models.model import Runtime, period_segments
@@ -53,13 +54,18 @@ class EngineConfig:
     max_batched_tokens: int = 128     # chunked-prefill budget per step
     enable_prefix_cache: bool = True
     # "mixed": one jitted device call per step over a single ragged batch
-    # of all decode tokens + prefill chunks (vLLM v1-style; auto-falls
-    # back to "sequential" for SSM/hybrid and encoder-decoder archs).
-    # "sequential": the v0-style separate decode_batch/prefill_chunk path.
+    # of all decode tokens + prefill chunks (vLLM v1-style) — the default
+    # for EVERY architecture family: attention-only, SSM/hybrid (ragged
+    # SSD scan with per-token live-state gather/scatter) and
+    # encoder-decoder (per-row cross-attention KV).
+    # "sequential": the v0-style separate decode_batch/prefill_chunk path,
+    # kept as an explicit config choice (equivalence oracle + debugging).
     execution_mode: str = "mixed"
     # attention impl for the mixed step: "ref" (jnp gather, runs
     # everywhere) | "pallas" (TPU kernel) | "pallas_interpret" (tests)
     mixed_attn_impl: str = "ref"
+    # ragged-SSD impl for the mixed step, same choices as above
+    mixed_ssd_impl: str = "ref"
     # execution-time model: clock advances by measured wall time of each
     # step, scaled by this factor (1.0 = honest CPU timing)
     time_scale: float = 1.0
@@ -98,6 +104,7 @@ class Engine:
             max_running=engine_cfg.max_running + 1,
             num_state_slots=engine_cfg.num_state_slots + 1,
             mixed_attn_impl=engine_cfg.mixed_attn_impl,
+            mixed_ssd_impl=engine_cfg.mixed_ssd_impl,
         )
         self.runner = ModelRunner(cfg, params, rcfg, stacked, rt)
 
@@ -124,13 +131,12 @@ class Engine:
         self._budget_debt = 0                 # min-progress overdraft
         self.preemptions = 0
         self.last_step_tokens = (0, 0)        # (n_decode, n_prefill)
+        self.t_assembly = 0.0                 # host-side batch-pack time
         if engine_cfg.execution_mode not in ("mixed", "sequential"):
             raise ValueError(
                 f"unknown execution_mode {engine_cfg.execution_mode!r}: "
                 "expected 'mixed' or 'sequential'")
-        self.use_mixed = (engine_cfg.execution_mode == "mixed"
-                          and self.runner.Ls == 0
-                          and not cfg.is_encoder_decoder)
+        self.use_mixed = engine_cfg.execution_mode == "mixed"
 
     # ------------------------------------------------------------------
     # submission
@@ -313,6 +319,10 @@ class Engine:
         r.n_computed = 0
         r.state_reused = False
         r.state = State.QUEUED
+        # drop the encoder KV now: re-admission re-encodes, and a
+        # preempted-then-never-readmitted request must not pin its
+        # cross-attention tensors for the engine's lifetime
+        self._xkv.pop(r.req_id, None)
         self.running.remove(r)
         self.waiting.insert(0, r)
         self.preemptions += 1
@@ -396,7 +406,8 @@ class Engine:
 
     # ------------------------------------------------------------------
     # sequential execution (v0-style: one decode batch + one device call
-    # per prefill chunk; the fallback for SSM/hybrid + enc-dec archs)
+    # per prefill chunk; kept as an explicit execution_mode choice — the
+    # mixed path's equivalence oracle and a debugging aid)
     # ------------------------------------------------------------------
     def _execute_decodes(self, ok: List[Request]) -> None:
         if not ok:
@@ -440,27 +451,41 @@ class Engine:
 
     # ------------------------------------------------------------------
     # unified mixed-batch execution: ALL decode tokens and prefill chunks
-    # of the step packed into one ragged batch → one jitted device call
+    # of the step packed into one ragged batch → one jitted device call.
+    # Serves every architecture family: attention-only, SSM/hybrid
+    # (ragged SSD scan over the packed axis) and encoder-decoder
+    # (per-row cross-attention KV indexed by req_rows).
     # ------------------------------------------------------------------
     def _execute_mixed(self, decodes: List[Request],
                        prefills: List[Tuple[Request, int, int]]) -> None:
         if not decodes and not prefills:
             return
+        t_host = time.perf_counter()
         bs = self.ecfg.block_size
         reqs = decodes + [r for r, _, _ in prefills]
         R = len(reqs)
         T = len(decodes) + sum(hi - lo for _, lo, hi in prefills)
 
-        tok_ids = np.zeros((T,), np.int32)
-        embeds = np.zeros((T, self.cfg.d_model), np.float32)
-        use_embeds = np.zeros((T,), bool)
-        positions = np.zeros((T,), np.int32)
-        adapter_idx = np.zeros((T,), np.int32)
-        req_rows = np.zeros((T,), np.int32)
-        write_bids = np.zeros((T,), np.int32)
-        write_offs = np.zeros((T,), np.int32)
-        out_rows = np.zeros((R,), np.int32)
+        # host-side assembly into the runner's persistent capacity-
+        # doubling buffers (no per-step reallocation)
+        take = self.runner.host_bufs.take
+        tok_ids = take("e_tok", T, np.int32)
+        embeds = take("e_emb", T, np.float32,
+                      trailing=(self.cfg.d_model,))
+        use_embeds = take("e_use", T, bool)
+        positions = take("e_pos", T, np.int32)
+        adapter_idx = take("e_ad", T, np.int32)
+        req_rows = take("e_rows", T, np.int32)
+        row_cols = take("e_cols", T, np.int32)
+        write_bids = take("e_wb", T, np.int32)
+        write_offs = take("e_wo", T, np.int32)
+        out_rows = take("e_out", R, np.int32)
+        run_slots = take("e_slots", R, np.int32)
         block_tables = [list(r.block_ids) for r in reqs]
+        # packed indices of prefill block-boundary tokens (SSM snapshot
+        # emission points) + each span's (offset, count) into that list
+        snap_rows: List[int] = []
+        span_snaps: List[Tuple[int, int]] = []
 
         t = 0
         for i, r in enumerate(decodes):
@@ -469,9 +494,11 @@ class Engine:
             positions[t] = pos
             adapter_idx[t] = self._adapter_idx(r, np.array([pos]))[0]
             req_rows[t] = i
-            write_bids[t] = r.block_ids[pos // bs]
-            write_offs[t] = pos % bs
+            if self.kv_mgr is not None:
+                write_bids[t] = r.block_ids[pos // bs]
+                write_offs[t] = pos % bs
             out_rows[i] = t
+            run_slots[i] = max(r.run_slot, 0)
             t += 1
         for j, (r, lo, hi) in enumerate(prefills):
             row = len(decodes) + j
@@ -483,27 +510,50 @@ class Engine:
             positions[sl] = pr
             adapter_idx[sl] = self._adapter_idx(r, pr)
             req_rows[sl] = row
-            bids = np.asarray(r.block_ids, np.int32)
-            write_bids[sl] = bids[pr // bs]
-            write_offs[sl] = pr % bs
+            row_cols[sl] = pr - lo
+            if self.kv_mgr is not None:
+                bids = np.asarray(r.block_ids, np.int32)
+                write_bids[sl] = bids[pr // bs]
+                write_offs[sl] = pr % bs
             out_rows[row] = t + n - 1
+            run_slots[row] = max(r.run_slot, 0)
+            off = len(snap_rows)
+            if self.st_mgr is not None:
+                # every b in range(lo//bs, hi//bs) is a FULL block:
+                # (b+1)*bs <= hi by construction
+                for b in range(lo // bs, hi // bs):
+                    snap_rows.append(t + (b + 1) * bs - 1 - lo)
+            span_snaps.append((off, len(snap_rows) - off))
             t += n
+
+        xkv_list = None
+        if self.cfg.is_encoder_decoder:
+            xkv_list = [(r.req_id, self._xkv[r.req_id]) for r in reqs]
 
         mb = MixedBatch(tok_ids=tok_ids, embeds=embeds,
                         use_embeds=use_embeds, positions=positions,
                         adapter_idx=adapter_idx, req_rows=req_rows,
-                        write_bids=write_bids, write_offs=write_offs,
-                        block_tables=block_tables, out_rows=out_rows)
+                        row_cols=row_cols, write_bids=write_bids,
+                        write_offs=write_offs, block_tables=block_tables,
+                        out_rows=out_rows, run_slots=run_slots,
+                        snap_rows=np.asarray(snap_rows, np.int32),
+                        xkv_list=xkv_list)
+        self.t_assembly += time.perf_counter() - t_host
         t0 = time.perf_counter()
-        logits = self.runner.execute_batch(mb)    # one jitted call
+        logits, boundary = self.runner.execute_batch(mb)  # one jitted call
         self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
         # decode bookkeeping first, then prefill — the same order the
         # sequential path registers blocks in
         for i, r in enumerate(decodes):
             self._postprocess_decode(r, int(np.argmax(logits[i])))
         for j, (r, lo, hi) in enumerate(prefills):
+            bnd = None
+            if boundary is not None:
+                off, cnt = span_snaps[j]
+                bnd = (boundary[0][:, off:off + cnt],
+                       boundary[1][:, off:off + cnt])
             self._postprocess_prefill(r, lo, hi, logits[len(decodes) + j],
-                                      None)
+                                      bnd)
 
     # ------------------------------------------------------------------
     def _adopt_canonical(self, r: Request, b: int, h) -> None:
@@ -555,12 +605,15 @@ class Engine:
             return
         b = pos // bs - 1
         toks = r.all_tokens
-        # extend the hash chain if needed
+        # extend the hash chain INCREMENTALLY from the last cached parent
+        # (one hash_block per new block; recomputing the whole chain from
+        # token 0 made long decodes O(n²) in hashing work)
         while len(r.hashes) <= b:
             i = len(r.hashes)
-            hs = request_block_hashes(toks[:(i + 1) * bs], bs,
-                                      r.adapter_key(), r.salt)
-            r.hashes = hs
+            lo, hi = i * bs, (i + 1) * bs
+            parent = r.hashes[-1] if r.hashes else None
+            extra = r.salt + block_extra(r.adapter_key(), lo, hi)
+            r.hashes.append(hash_block(parent, toks[lo:hi], extra))
         h = r.hashes[b]
         if self.kv_mgr is not None and b < len(r.block_ids):
             self._adopt_canonical(r, b, h)

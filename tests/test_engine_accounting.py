@@ -264,3 +264,176 @@ def test_one_device_call_per_mixed_step(setup):
     before = eng_s.runner.num_device_calls
     eng_s.step()
     assert eng_s.runner.num_device_calls - before == 3
+
+
+# ---------------------------------------------------------------------------
+# 5. mixed ≡ sequential across architecture families (SSM / hybrid /
+#    encoder-decoder) — every config runs the one-device-call step
+# ---------------------------------------------------------------------------
+ARCHS = ["mamba2-2.7b", "zamba2-2.7b", "whisper-large-v3"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    from repro.configs import get_reduced
+    cfg = get_reduced(request.param)
+    params = init_params(jax.random.key(1), cfg)
+    alora = init_adapter_weights(jax.random.key(7), cfg, 8)
+    lora = init_adapter_weights(jax.random.key(8), cfg, 8)
+    return cfg, params, alora, lora
+
+
+def mk_arch_engine(arch_setup, mode, **ecfg_kw):
+    cfg, params, alora, lora = arch_setup
+    ads = [(AdapterSpec("uq", rank=8, invocation_tokens=INV), alora),
+           (AdapterSpec("lm", rank=8, invocation_tokens=None), lora)]
+    return cfg, Engine(cfg, params, adapters=ads,
+                       engine_cfg=EngineConfig(execution_mode=mode,
+                                               **ecfg_kw))
+
+
+def submit_kw(cfg, seed):
+    """Extra submit args an encoder-decoder request needs: stub frame
+    embeddings plus a content-digest cache salt."""
+    if not cfg.is_encoder_decoder:
+        return {}
+    fr = np.random.RandomState(1000 + seed).randn(
+        cfg.encoder_seq_len, cfg.d_model).astype(np.float32)
+    return dict(frame_embeds=fr, salt=(seed,))
+
+
+def test_mixed_equals_sequential_archs(arch_setup):
+    """Base/aLoRA/LoRA mix must be token-identical across execution
+    modes on SSM, hybrid and encoder-decoder configs, with the mixed
+    path never touching the sequential step functions."""
+    outs = []
+    for mode in ("mixed", "sequential"):
+        cfg, eng = mk_arch_engine(arch_setup, mode)
+        specs = [(prompt_of(40, 1, cfg.vocab_size), None, 1),
+                 (prompt_of(52, 2, cfg.vocab_size) + list(INV), "uq", 2),
+                 (prompt_of(33, 3, cfg.vocab_size), "lm", 3)]
+        rids = [eng.submit(p, 6, adapter_name=name, **submit_kw(cfg, s))
+                for p, name, s in specs]
+        eng.run_until_idle()
+        outs.append([eng.request(r).output_tokens for r in rids])
+        if mode == "mixed":
+            assert eng.use_mixed
+            assert eng.runner.call_counts["prefill_chunk"] == 0
+            assert eng.runner.call_counts["decode_batch"] == 0
+            assert eng.runner.call_counts["mixed_step"] > 0
+        else:
+            assert eng.runner.call_counts["mixed_step"] == 0
+    assert all(len(o) == 6 for o in outs[0])
+    assert outs[0] == outs[1]
+
+
+def test_mixed_state_snapshot_reuse_archs(arch_setup):
+    """SSM/hybrid: the mixed path must keep feeding (and consuming) the
+    beyond-paper state-snapshot cache exactly like the sequential path."""
+    cfg, *_ = arch_setup
+    if cfg.ssm is None:
+        pytest.skip("state snapshots are an SSM-arch feature")
+    outs, hits = [], []
+    for mode in ("mixed", "sequential"):
+        cfg, eng = mk_arch_engine(arch_setup, mode)
+        x = prompt_of(96, 1, cfg.vocab_size)
+        r1 = eng.submit(x, 8)
+        eng.run_until_idle()
+        y = eng.request(r1).output_tokens
+        r2 = eng.submit(x + y + list(INV), 4, adapter_name="uq")
+        eng.run_until_idle()
+        req = eng.request(r2)
+        outs.append(req.output_tokens)
+        hits.append((req.n_cache_hit_tokens, req.state_reused))
+    assert outs[0] == outs[1]
+    assert hits[0] == hits[1]
+    assert hits[0][0] > 0 and hits[0][1]
+
+
+def test_mixed_equals_sequential_preemption_archs(arch_setup):
+    """Tiny block/state pools force recompute-preemption; both paths
+    must still emit identical tokens on every arch family."""
+    cfg, *_ = arch_setup
+    outs, preempts = [], []
+    for mode in ("mixed", "sequential"):
+        cfg, eng = mk_arch_engine(arch_setup, mode, num_blocks=8,
+                                  max_running=2, num_state_slots=6)
+        rids = [eng.submit(prompt_of(64, i, cfg.vocab_size), 4,
+                           **submit_kw(cfg, i)) for i in range(3)]
+        eng.run_until_idle()
+        outs.append([eng.request(r).output_tokens for r in rids])
+        preempts.append(eng.preemptions)
+        assert not eng._xkv          # encoder KV fully released
+    assert outs[0] == outs[1]
+    assert preempts[0] == preempts[1]
+    if cfg.num_attn_layers() > 0:    # block-bearing archs must starve
+        assert preempts[0] > 0
+    assert all(len(o) == 4 for o in outs[0])
+
+
+def test_mixed_ragged_ssd_pallas_matches_ref(arch_setup):
+    """The interpret-mode Pallas ragged-SSD kernel, plumbed through
+    EngineConfig.mixed_ssd_impl, must emit the same tokens as the jnp
+    reference scan."""
+    cfg, *_ = arch_setup
+    if cfg.ssm is None:
+        pytest.skip("ragged SSD scan is an SSM-arch path")
+    outs = []
+    for impl in ("ref", "pallas_interpret"):
+        cfg, eng = mk_arch_engine(arch_setup, "mixed",
+                                  mixed_ssd_impl=impl)
+        rids = [eng.submit(prompt_of(24, 1, cfg.vocab_size), 3),
+                eng.submit(prompt_of(20, 2, cfg.vocab_size) + list(INV),
+                           3, adapter_name="uq")]
+        eng.run_until_idle()
+        outs.append([eng.request(r).output_tokens for r in rids])
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# 6. scheduler hot-path bugfix regressions
+# ---------------------------------------------------------------------------
+def test_decode_block_hashing_is_incremental(setup, monkeypatch):
+    """Completing a decoded block must cost exactly ONE hash_block call
+    (the chain extends from the cached parent; recomputing from token 0
+    made long generations O(n²))."""
+    import repro.serving.engine as engine_mod
+    from repro.core.block_hash import request_block_hashes
+    eng = mk_engine(setup)
+    calls = []
+    real = engine_mod.hash_block
+    monkeypatch.setattr(engine_mod, "hash_block",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    rid = eng.submit(prompt_of(30, seed=1), 40)
+    eng.run_until_idle()
+    req = eng.request(rid)
+    # positions 32/48/64 complete blocks 1/2/3 during decode
+    n_new_blocks = len(req.all_tokens) // eng.ecfg.block_size - \
+        len(req.prompt) // eng.ecfg.block_size
+    assert len(calls) == n_new_blocks == 3
+    # the incremental chain must equal a from-scratch recompute
+    assert req.hashes == request_block_hashes(
+        req.all_tokens[:64], eng.ecfg.block_size, req.adapter_key(),
+        req.salt)
+
+
+def test_preempt_releases_encoder_kv():
+    """Preempting an encoder-decoder request must drop its cross-
+    attention KV from the engine (re-admission re-encodes); a preempted-
+    then-never-readmitted request must not leak it."""
+    from repro.configs import get_reduced
+    cfg = get_reduced("whisper-large-v3")
+    params = init_params(jax.random.key(1), cfg)
+    eng = Engine(cfg, params, engine_cfg=EngineConfig())
+    rids = [eng.submit(prompt_of(20, seed=i, vocab=cfg.vocab_size), 4,
+                       **{"frame_embeds": np.random.RandomState(i).randn(
+                           cfg.encoder_seq_len, cfg.d_model
+                       ).astype(np.float32), "salt": (i,)})
+            for i in range(2)]
+    eng.step()
+    assert set(eng._xkv) == set(rids)
+    victim = eng.running[-1]
+    eng._preempt(victim)
+    assert victim.req_id not in eng._xkv
+    eng.run_until_idle()
+    assert not eng._xkv

@@ -1,10 +1,12 @@
-"""SSD chunk-scan Pallas kernel vs the token-recurrence oracle."""
+"""SSD chunk-scan Pallas kernels (dense + ragged) vs the token-recurrence
+oracles."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import ssd_chunk_ref, ssd_chunk_scan_op
+from repro.kernels.ops import (ragged_ssd_scan_op, ragged_ssd_scan_ref,
+                               ssd_chunk_ref, ssd_chunk_scan_op)
 
 KEY = jax.random.key(0)
 
@@ -59,4 +61,93 @@ def test_ssd_kernel_matches_model_ssd_forward():
                                  interpret=True)
     y_r, s_r = ssd_chunk_ref(x, B, C, dA, dt)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ragged (packed-axis) variant — the mixed serving step's SSD scan
+# ---------------------------------------------------------------------------
+def ragged_inputs(lens, H, P, N, S, seed=0):
+    T = sum(lens)
+    x, B, C, dA, dt = inputs(1, T, H, P, N, seed=seed)
+    x, B, C, dA, dt = x[0], B[0], C[0], dA[0], dt[0]
+    init = jax.random.normal(jax.random.key(seed + 1), (S, H, N, P))
+    seg_ids = np.concatenate(
+        [[i] * n for i, n in enumerate(lens)]).astype(np.int32)
+    starts = np.zeros(T, bool)
+    slots = np.zeros(T, np.int32)
+    off = 0
+    for i, n in enumerate(lens):
+        starts[off] = True
+        slots[off:off + n] = i % S
+        off += n
+    return (x, B, C, dA, dt, jnp.asarray(seg_ids), jnp.asarray(starts),
+            jnp.asarray(slots), init)
+
+
+def ragged_oracle(x, B, C, dA, dt, seg_ids, starts, slots, init):
+    """Token-by-token numpy recurrence with per-segment state reset."""
+    T, H, P = x.shape
+    N = B.shape[-1]
+    ys = np.zeros((T, H, P), np.float32)
+    sts = np.zeros((T, H, N, P), np.float32)
+    state = np.zeros((H, N, P), np.float32)
+    for t in range(T):
+        if bool(starts[t]):
+            state = np.asarray(init[int(slots[t])], np.float32)
+        state = np.exp(np.asarray(dA[t]))[:, None, None] * state + \
+            np.einsum("hn,hp->hnp",
+                      np.asarray(B[t]) * np.asarray(dt[t])[:, None],
+                      np.asarray(x[t], np.float32))
+        ys[t] = np.einsum("hn,hnp->hp", np.asarray(C[t]), state)
+        sts[t] = state
+    return ys, sts
+
+
+@pytest.mark.parametrize("lens", [
+    [1, 1, 1, 1],              # decode-only batch
+    [1, 1, 12, 23],            # mixed decode + prefill chunks
+    [16, 16],                  # block-aligned prefill pair
+    [37],                      # single segment
+])
+def test_ragged_ssd_ref_matches_oracle(lens):
+    args = ragged_inputs(lens, H=3, P=16, N=8, S=5, seed=sum(lens))
+    y, st = ragged_ssd_scan_ref(args[0], args[1], args[2], args[3],
+                                args[4], args[6], args[7], args[8])
+    y_o, st_o = ragged_oracle(*args)
+    np.testing.assert_allclose(np.asarray(y), y_o, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), st_o, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("lens,chunk", [
+    ([1, 1, 12, 23], 8),       # several segment boundaries per chunk
+    ([1, 1, 12, 23], 64),      # whole batch in one chunk (+ padding)
+    ([16, 16, 16], 16),        # segment boundaries ON chunk boundaries
+    ([5, 40], 16),             # segment spanning multiple chunks
+])
+def test_ragged_ssd_kernel_matches_ref(lens, chunk):
+    args = ragged_inputs(lens, H=2, P=16, N=8, S=4, seed=7)
+    y_r, st_r = ragged_ssd_scan_ref(args[0], args[1], args[2], args[3],
+                                    args[4], args[6], args[7], args[8])
+    y_k, st_k = ragged_ssd_scan_op(*args, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ragged_single_segment_matches_dense_scan():
+    """One zero-init segment covering the whole axis must agree with the
+    dense single-sequence oracle."""
+    x, B, C, dA, dt = inputs(1, 48, 2, 16, 8, seed=11)
+    T = 48
+    init = jnp.zeros((2, 2, 8, 16))
+    starts = jnp.asarray(np.eye(T, 1, dtype=bool)[:, 0])
+    slots = jnp.zeros((T,), jnp.int32)
+    y_r, st_r = ragged_ssd_scan_ref(x[0], B[0], C[0], dA[0], dt[0],
+                                    starts, slots, init)
+    y_d, s_d = ssd_chunk_ref(x, B, C, dA, dt)
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_d[0]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_r[-1]), np.asarray(s_d[0]),
                                rtol=2e-4, atol=2e-4)
