@@ -1,12 +1,39 @@
 """Paper §4.4.1: five adapters invoked in parallel on the same (x+y)
-context + consolidated final base call."""
+context + consolidated final base call.
+
+``--churn`` instead exercises the dynamic adapter-lifecycle subsystem:
+more adapters REGISTERED than device slots, requests cycling through
+them so admission constantly pins/evicts/prefetches slots.  Asserts the
+two churn invariants (CI runs this at tiny scale via ``--churn
+--smoke``):
+
+* 1.0 device-calls/step — adapter installs/prefetches happen off the
+  step path, so the mixed step stays one jitted call per iteration;
+* zero recompiles after warmup — the jitted step functions' jit caches
+  (the engine's cache-miss counter) must not grow while adapters cycle
+  through slots, and the output must be token-identical to an
+  all-resident sequential oracle.
+
+Adapter-lifecycle counters (prefetch issued/hit, evictions, occupancy,
+stalled installs) are emitted per run and appended to
+``results/adapter_pool.jsonl`` for ``benchmarks/report.py``.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
+import numpy as np
+
 from benchmarks.common import emit, make_engine, stage_row
+from repro.serving import EngineConfig
+from repro.serving import runner as runner_mod
 from repro.serving import pipelines as P
 from repro.serving.metrics import speedup_table
 
 N_ADAPTERS = 5
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
 def run():
@@ -31,5 +58,111 @@ def run():
          " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
 
 
+# ---------------------------------------------------------------------------
+# adapter-churn leg (dynamic adapter lifecycle)
+# ---------------------------------------------------------------------------
+def _jit_cache_sizes() -> int:
+    """Total cached traces across the engine's jitted step functions —
+    the recompile counter the churn invariant is asserted on."""
+    return sum(f._cache_size() for f in (
+        runner_mod._mixed_impl, runner_mod._prefill_impl,
+        runner_mod._decode_impl, runner_mod._encode_impl))
+
+
+def _churn_workload(eng, *, n_adapters: int, reps: int, prompt_len: int,
+                    gen_len: int, seed: int):
+    rng = np.random.RandomState(seed)
+    rids = []
+    k = 0
+    for rep in range(reps):
+        for i in range(n_adapters):
+            inv = list(eng.adapters[f"ad{i}"].spec.invocation_tokens)
+            prompt = list(rng.randint(10, 400, prompt_len)) + inv
+            rids.append(eng.submit(prompt, gen_len,
+                                   adapter_name=f"ad{i}",
+                                   arrival_time=1e-9 * k))
+            k += 1
+    steps, times, occ = 0, [], []
+    while eng.pending or eng.waiting or eng.running:
+        dt = eng.step()
+        n_d, n_p = eng.last_step_tokens
+        if n_d or n_p:
+            steps += 1
+            times.append(dt)
+            occ.append(eng.adapter_pool.occupancy)
+    return rids, steps, times, occ
+
+
+def run_churn(arch: str, smoke: bool = False):
+    n_adapters = 4 if smoke else 8
+    slots = 2 if smoke else 3
+    prompt_len = 24 if smoke else 64
+    gen_len = 6 if smoke else 16
+    reps = 2 if smoke else 3
+    kw = dict(n_adapters=n_adapters, reps=reps, prompt_len=prompt_len,
+              gen_len=gen_len)
+
+    # all-resident sequential oracle for token-identity
+    eng_o = make_engine("alora", n_adapters=n_adapters, arch=arch,
+                        ecfg=EngineConfig(max_running=4,
+                                          execution_mode="sequential"))
+    rids_o, *_ = _churn_workload(eng_o, seed=7, **kw)
+    oracle = [eng_o.request(r).output_tokens for r in rids_o]
+
+    def mk():
+        return make_engine("alora", n_adapters=n_adapters, arch=arch,
+                           ecfg=EngineConfig(max_running=4,
+                                             adapter_slots=slots))
+
+    eng = mk()
+    _churn_workload(eng, seed=999, **kw)          # warmup (jit traces)
+    compiles_before = _jit_cache_sizes()
+    eng = mk()                                    # fresh pool, warm jit
+    calls_before = eng.runner.num_device_calls
+    rids, steps, times, occ = _churn_workload(eng, seed=7, **kw)
+    calls = eng.runner.num_device_calls - calls_before
+
+    out = [eng.request(r).output_tokens for r in rids]
+    assert out == oracle, "churn output diverged from all-resident oracle"
+    assert calls == steps, (calls, steps)         # 1.0 device-calls/step
+    recompiles = _jit_cache_sizes() - compiles_before
+    assert recompiles == 0, f"{recompiles} post-warmup recompiles"
+    st = eng.adapter_pool_stats()
+    assert st.evictions > 0, "churn never evicted — slots not scarce?"
+
+    emit(f"adapter_churn/{arch}/step_latency",
+         float(np.mean(times)) * 1e6,
+         f"p50={np.median(times)*1e6:.0f}us steps={steps}")
+    emit(f"adapter_churn/{arch}/device_calls_per_step", calls / steps,
+         f"calls={calls} steps={steps} recompiles_after_warmup="
+         f"{recompiles}")
+    emit(f"adapter_churn/{arch}/adapter_pool",
+         float(np.mean(occ)),
+         f"slots={st.num_slots} registered={st.num_registered} "
+         f"prefetch={st.prefetch_issued}/{st.prefetch_hits}hit "
+         f"installs={st.installs} evictions={st.evictions} "
+         f"stalled={st.stalled_installs} queued_on_slots="
+         f"{st.acquire_fails}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    rec = dict(arch=arch, smoke=smoke, n_adapters=n_adapters,
+               steps=steps, device_calls_per_step=calls / steps,
+               recompiles_after_warmup=recompiles,
+               occupancy_mean=float(np.mean(occ)), **st.row())
+    with open(os.path.join(RESULTS, "adapter_pool.jsonl"), "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3.2-8b")
+    ap.add_argument("--churn", action="store_true",
+                    help="adapter-lifecycle churn leg (N registered > "
+                         "device slots)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI smoke runs")
+    args = ap.parse_args()
+    if args.churn:
+        run_churn(args.arch, smoke=args.smoke)
+    else:
+        run()

@@ -89,6 +89,25 @@ def perf_table(perf, base_idx):
               f"{fmt_mem(r):.1f} |")
 
 
+def adapter_pool_table(recs):
+    """Adapter-lifecycle counters from the churn benchmark
+    (``bench_multi_adapter.py --churn`` appends one record per run)."""
+    print("\n### Adapter pool — lifecycle counters (churn runs)\n")
+    print("| arch | slots | registered | calls/step | recompiles | "
+          "prefetch iss/hit | installs | evictions | stalled | "
+          "occupancy |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['arch']} | {r['num_slots']:.0f} | "
+              f"{r['num_registered']:.0f} | "
+              f"{r['device_calls_per_step']:.2f} | "
+              f"{r['recompiles_after_warmup']} | "
+              f"{r['prefetch_issued']:.0f}/{r['prefetch_hits']:.0f} | "
+              f"{r['installs']:.0f} | {r['evictions']:.0f} | "
+              f"{r['stalled_installs']:.0f} | "
+              f"{r['occupancy_mean']:.2f} |")
+
+
 def main():
     pod = load(os.path.join(BASE, "dryrun_all.jsonl"))
     # dedup: last record per key wins
@@ -104,6 +123,13 @@ def main():
     if perf:
         base_idx = {(r["arch"], r["shape"], r["mesh"]): r for r in pod}
         perf_table(perf, base_idx)
+    pool = load(os.path.join(BASE, "adapter_pool.jsonl"))
+    if pool:
+        # append-mode artifact: last record per (arch, smoke) wins
+        latest = {}
+        for r in pool:
+            latest[(r["arch"], r["smoke"])] = r
+        adapter_pool_table(list(latest.values()))
 
 
 if __name__ == "__main__":

@@ -12,7 +12,10 @@ from repro.core.alora import (  # noqa: F401
     PAPER_LORA_RANK,
     AdapterSpec,
     adapter_param_specs,
+    adapter_rank_of,
     init_adapter_weights,
+    pad_adapter_rank,
+    per_layer_adapters,
     stack_adapters,
     zero_adapter_weights,
 )

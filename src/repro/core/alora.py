@@ -104,15 +104,71 @@ def zero_adapter_weights(cfg: ModelConfig, rank: int) -> Params:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), w)
 
 
+def adapter_rank_of(weights: Params) -> int:
+    """Read an adapter's rank off its first segment's A matrix."""
+    seg = weights[sorted(weights)[0]]
+    a = seg["aq"] if "aq" in seg else seg["a"]
+    return a.shape[-1]
+
+
+def pad_adapter_rank(weights: Params, target_rank: int) -> Params:
+    """Zero-extend an adapter's rank dimension to ``target_rank``.
+
+    The **zero-block invariant**: for every A/B pair the delta is
+    ``x @ A @ B``; appending zero *columns* to A (axis -1) and matching
+    zero *rows* to B (axis -2) leaves the product bit-identical —
+    ``x @ [A|0] @ [B;0] == x @ A @ B``.  This is what lets heterogeneous
+    ranks share one bucketed slot shape in the device-resident adapter
+    pool without perturbing aLoRA semantics (pre-activation tokens still
+    see an exact zero delta through adapter index 0).
+    """
+    r = adapter_rank_of(weights)
+    if r == target_rank:
+        return weights
+    assert r < target_rank, (r, target_rank)
+
+    def pad(path_key: str, leaf):
+        pads = [(0, 0)] * leaf.ndim
+        if path_key.startswith("a"):            # A: (..., d, r) — pad cols
+            pads[-1] = (0, target_rank - r)
+        else:                                   # B: (..., r, out) — pad rows
+            assert path_key.startswith("b"), path_key
+            pads[-2] = (0, target_rank - r)
+        return jnp.pad(leaf, pads)
+
+    return {seg: {k: pad(k, v) for k, v in leaves.items()}
+            for seg, leaves in weights.items()}
+
+
 def stack_adapters(cfg: ModelConfig, adapters: List[Params],
                    rank: int) -> Params:
     """Stack [zero, ad_1, ..., ad_n] along a new adapter axis.
 
+    ``rank`` is the stacked (slot-bucket) rank: adapters of any rank
+    ≤ ``rank`` are zero-extended into the bucket shape first
+    (``pad_adapter_rank`` — exact, see the zero-block invariant there),
+    so heterogeneous-rank adapter sets stack into one tensor.
+
     Output leaves: (repeats, count, n+1, ...) — sliced per layer inside
     the model scan, then indexed per token by ``lora_delta``.
     """
-    all_ads = [zero_adapter_weights(cfg, rank)] + list(adapters)
+    all_ads = [zero_adapter_weights(cfg, rank)] + \
+        [pad_adapter_rank(w, rank) for w in adapters]
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=2), *all_ads)
+
+
+def per_layer_adapters(cfg: ModelConfig, stacked: Params) -> List[Params]:
+    """Slice a segment-stacked adapter tree into the per-layer list the
+    serving runner (and the adapter pool) consume: one pytree per model
+    layer, leaves keeping their leading adapter axis."""
+    out: List[Params] = []
+    repeats, segs = period_segments(cfg)
+    for r in range(repeats):
+        for si, (kind, count) in enumerate(segs):
+            seg = stacked[f"seg{si}"]
+            for c in range(count):
+                out.append(jax.tree.map(lambda a: a[r, c], seg))
+    return out
 
 
 def adapter_param_specs(cfg: ModelConfig, rank: int, n_adapters: int

@@ -124,6 +124,21 @@ def ragged_ssd_scan_op(x: jax.Array, B: jax.Array, C: jax.Array,
     return y[:T], st[:T]
 
 
+@partial(jax.jit, static_argnames=("t_block", "o_block", "interpret"))
+def ragged_lora_op(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
+                   adapter_idx: jax.Array, active_slots: jax.Array, *,
+                   t_block: int = 256, o_block: int = 256,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Padded/jitted SGMV-style grouped-LoRA delta over per-token slot
+    indices.  x: (T, d) -> (T, out)."""
+    from repro.kernels.ragged_lora import ragged_grouped_lora_padded
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ragged_grouped_lora_padded(x, a_stack, b_stack, adapter_idx,
+                                      active_slots, t_block=t_block,
+                                      o_block=o_block, interpret=interpret)
+
+
 # pure-jnp oracles re-exported for benchmarks/tests
 paged_attention_ref = ref.paged_attention_ref
 ragged_paged_attention_ref = ref.ragged_paged_attention_ref
@@ -131,3 +146,9 @@ alora_qkv_ref = ref.alora_qkv_ref
 ssd_chunk_ref = ref.ssd_chunk_ref
 ragged_ssd_scan_ref = ref.ragged_ssd_scan_ref
 packed_cross_attention_ref = ref.packed_cross_attention_ref
+
+
+def ragged_lora_ref(x, a_stack, b_stack, adapter_idx, active_slots):
+    from repro.kernels.ragged_lora import ragged_grouped_lora_ref
+    return ragged_grouped_lora_ref(x, a_stack, b_stack, adapter_idx,
+                                   active_slots)

@@ -171,22 +171,67 @@ def lora_delta(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
     return acc
 
 
+def lora_delta_dispatch(x: jax.Array, a_stack: jax.Array,
+                        b_stack: jax.Array, adapter_idx: jax.Array,
+                        active_slots: Optional[jax.Array] = None, *,
+                        impl: str = "dense") -> jax.Array:
+    """Multi-adapter delta with a pluggable implementation (the serving
+    engine's ``EngineConfig.mixed_lora_impl``):
+
+    "dense" — :func:`lora_delta`'s stacked scan over EVERY slot in the
+    device stack (the pre-pool behavior; equivalence oracle);
+    "ref"   — ragged grouped jnp scan over only the step's active slots;
+    "pallas"/"pallas_interpret" — the SGMV-style Pallas kernel.
+
+    x / adapter_idx may carry leading batch dims; the grouped paths
+    flatten them onto the token axis.
+    """
+    if impl == "dense" or active_slots is None:
+        return lora_delta(x, a_stack, b_stack, adapter_idx)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    idx2 = adapter_idx.reshape(-1)
+    if impl == "ref":
+        from repro.kernels.ragged_lora import ragged_grouped_lora_ref
+        d = ragged_grouped_lora_ref(x2, a_stack, b_stack, idx2,
+                                    active_slots)
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ragged_lora import ragged_grouped_lora_padded
+        d = ragged_grouped_lora_padded(
+            x2, a_stack, b_stack, idx2, active_slots,
+            interpret=(impl == "pallas_interpret"))
+    else:
+        raise ValueError(f"unknown grouped-LoRA impl {impl!r}: expected "
+                         "'dense', 'ref', 'pallas' or 'pallas_interpret'")
+    return d.reshape(lead + (d.shape[-1],))
+
+
 def qkv_project(p: Params, cfg: ModelConfig, x: jax.Array,
                 alora: Optional[Params] = None,
-                adapter_idx: Optional[jax.Array] = None):
+                adapter_idx: Optional[jax.Array] = None, *,
+                lora_impl: str = "dense",
+                active_slots: Optional[jax.Array] = None):
     """Project to q, k, v.  When ``alora`` is given, apply the activation-
     aware masked low-rank update of the paper to each of Q/K/V.
 
     alora: {"aq","bq","ak","bk","av","bv"} with leading adapter dim.
+    ``lora_impl``/``active_slots`` select the grouped ragged delta used
+    by the mixed serving step (:func:`lora_delta_dispatch`).
     """
     q = x @ p["wq"]
     k = x @ p["wk"]
     v = x @ p["wv"]
     if alora is not None:
         assert adapter_idx is not None
-        q = q + lora_delta(x, alora["aq"], alora["bq"], adapter_idx)
-        k = k + lora_delta(x, alora["ak"], alora["bk"], adapter_idx)
-        v = v + lora_delta(x, alora["av"], alora["bv"], adapter_idx)
+        q = q + lora_delta_dispatch(x, alora["aq"], alora["bq"],
+                                    adapter_idx, active_slots,
+                                    impl=lora_impl)
+        k = k + lora_delta_dispatch(x, alora["ak"], alora["bk"],
+                                    adapter_idx, active_slots,
+                                    impl=lora_impl)
+        v = v + lora_delta_dispatch(x, alora["av"], alora["bv"],
+                                    adapter_idx, active_slots,
+                                    impl=lora_impl)
     *lead, _ = x.shape
     q = q.reshape(*lead, cfg.num_heads, cfg.head_dim)
     k = k.reshape(*lead, cfg.num_kv_heads, cfg.head_dim)

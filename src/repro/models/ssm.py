@@ -226,7 +226,9 @@ def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
                        last_rows: jax.Array, row_slots: jax.Array,
                        alora: Optional[Params] = None,
                        adapter_idx: Optional[jax.Array] = None,
-                       impl: str = "ref"):
+                       impl: str = "ref",
+                       lora_impl: str = "dense",
+                       active_slots: Optional[jax.Array] = None):
     """One SSM sublayer over a MIXED RAGGED batch (the unified serving
     step): every scheduled token — decode singletons and prefill chunks
     alike — packed along one token axis, each request's tokens forming a
@@ -244,6 +246,8 @@ def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
     last_rows: (R,) int32 — packed index of each request's final token
     row_slots: (R,) int32 — run slot per request row (scatter-back)
     impl:      "ref" (packed-axis jnp scan) | "pallas" | "pallas_interpret"
+    lora_impl/active_slots: grouped-LoRA delta selection for the in_proj
+               adapter update (``layers.lora_delta_dispatch``)
 
     Returns (y (T, d_model), new live_ssm, new live_conv,
              snap_ssm (Cb, nh, N, P) fp32, snap_conv (Cb, W-1, ch)).
@@ -257,8 +261,10 @@ def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
 
     zxbcdt = x @ p["in_proj"]
     if alora is not None:
-        from repro.models.layers import lora_delta
-        zxbcdt = zxbcdt + lora_delta(x, alora["a"], alora["b"], adapter_idx)
+        from repro.models.layers import lora_delta_dispatch
+        zxbcdt = zxbcdt + lora_delta_dispatch(
+            x, alora["a"], alora["b"], adapter_idx, active_slots,
+            impl=lora_impl)
     z = zxbcdt[..., :d_inner]
     xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
     dtr = zxbcdt[..., d_inner + conv_ch:]              # (T, nh)

@@ -1,6 +1,9 @@
-"""Serving engine: paged KV cache + cross-model prefix reuse + aLoRA."""
+"""Serving engine: paged KV cache + cross-model prefix reuse + aLoRA +
+dynamic adapter lifecycle (paged adapter-slot pool)."""
+from repro.serving.adapter_pool import AdapterPool  # noqa: F401
 from repro.serving.engine import Engine, EngineConfig  # noqa: F401
-from repro.serving.metrics import (aggregate, MetricsAggregate,  # noqa: F401
+from repro.serving.metrics import (AdapterPoolStats,  # noqa: F401
+                                   aggregate, MetricsAggregate,
                                    speedup_table)
 from repro.serving.request import Request, State  # noqa: F401
 from repro.serving.runner import ModelRunner, RunnerConfig  # noqa: F401

@@ -1,0 +1,288 @@
+"""Dynamic adapter lifecycle — the paged adapter-slot pool.
+
+The engine used to freeze its adapter set at construction: one
+equal-rank ``stack_adapters`` call, every adapter permanently resident,
+nothing registerable afterwards.  This module makes adapters a *paged,
+cached resource* exactly like KV blocks (S-LoRA's unified-paging
+insight, arXiv 2311.03285): a host-side registry of arbitrarily many
+adapters backs a small fixed pool of **device-resident slots**, and the
+scheduler moves adapters through the slots as requests come and go.
+
+Layout
+------
+``layers`` is the per-layer stacked A/B tensor list the model runner's
+jitted step consumes directly (leaves ``(S+1, d, R)`` / ``(S+1, R, out)``
+— slot 0 is the permanently-zero adapter, R the bucketed slot rank).
+Registering an adapter rank-pads its weights into the bucket shape
+(``core.alora.pad_adapter_rank`` — exact, zero-extension) and keeps them
+host-side; residency means the weights have been scattered into slot
+``s`` of every layer tensor.  The list object is shared with the runner,
+so slot installs are visible to the next step without re-plumbing.
+
+Per-registration state machine
+------------------------------
+::
+
+                 register
+                    │
+                    ▼
+   ┌──────────── HOST-ONLY ◄────────────────────┐
+   │ prefetch       │ acquire (admission)       │ evict (LRU, pins==0)
+   │                ▼                           │
+   └─────────► PREFETCHED ──install──► RESIDENT─┘
+                              (slot s)  pins>=0
+                                          │ ▲
+                                 release  │ │ acquire (hit)
+                                 (finish/ ▼ │  pins+=1
+                                  preempt)
+
+* ``prefetch(uid)`` — scheduler-driven, issued while a request waits in
+  the queue: ``jax.device_put`` of the padded weights.  The transfer is
+  **async** (JAX dispatch); by the time the request is admitted and its
+  first mixed step runs, the H2D copy has overlapped with host-side
+  scheduling — adapter churn never blocks the one-call-per-step path.
+* ``acquire(uid)`` — at admission: pins the adapter's slot (ref count),
+  installing it first if not resident (allocating a free slot or
+  evicting the least-recently-used *unpinned* one).  The install
+  scatters the staged weights into the slot stack and drops the staging
+  copy — residency costs one copy of the weights.  Returns ``None``
+  when every slot is pinned — the scheduler keeps the request queued
+  behind eviction.
+* ``release(uid)`` — at request finish/preemption: unpin.  The slot
+  stays resident (warm) until LRU eviction needs it.
+* Evicted slots keep their stale weights until the next install; this is
+  safe because a token's adapter index only ever points at a slot pinned
+  by that token's own running request.
+
+Cache identity: registrations are keyed by ``uid = name#vN`` (version
+monotonic per pool).  Block hashes salt on the uid, never the slot
+index and never the bare name — slot reuse after eviction, and
+re-registration of a name with different weights, can therefore never
+alias prefix-cache entries across adapters.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.alora import (AdapterSpec, adapter_rank_of,
+                              pad_adapter_rank, per_layer_adapters,
+                              zero_adapter_weights)
+from repro.serving.metrics import AdapterPoolStats
+
+Params = Dict[str, Any]
+
+
+def rank_bucket(rank: int, lo: int = 8) -> int:
+    """Pow2 rank bucket (min ``lo``) — the slot shape ranks pad into."""
+    v = lo
+    while v < rank:
+        v *= 2
+    return v
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _slot_scatter(pool_leaf, w, slot):
+    """In-place slot write: donating the stack buffer lets XLA alias the
+    output onto it, so an install costs O(one adapter's weights) instead
+    of a fresh copy of the whole (S+1)-wide stack per leaf."""
+    return pool_leaf.at[slot].set(w.astype(pool_leaf.dtype))
+
+
+@dataclass
+class AdapterRegistration:
+    spec: AdapterSpec
+    uid: str
+    host_layers: List[Params]               # per-layer, rank-padded, host
+    device_layers: Optional[List[Params]] = None   # prefetched (device)
+    slot: Optional[int] = None              # resident slot, if any
+    pins: int = 0                           # running requests holding it
+
+
+class AdapterPool:
+    """Fixed device slot pool + host registry (see module docstring)."""
+
+    def __init__(self, cfg: ModelConfig, *, num_slots: int, slot_rank: int):
+        assert num_slots >= 1 and slot_rank >= 1
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.slot_rank = slot_rank
+        # per-layer stacked tensors, leading dim num_slots+1, slot 0 zero.
+        # THE list object is shared with the model runner — entries are
+        # replaced in place on install, never the list itself.
+        zero = zero_adapter_weights(cfg, slot_rank)
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros(a.shape[:2] + (num_slots + 1,)
+                                + a.shape[2:], a.dtype), zero)
+        self.layers: List[Params] = per_layer_adapters(cfg, stacked)
+        self._by_uid: Dict[str, AdapterRegistration] = {}
+        self._by_name: Dict[str, str] = {}
+        self._versions: Dict[str, int] = {}
+        self._free: List[int] = list(range(1, num_slots + 1))
+        # residency recency: uid -> None, least-recently-acquired first
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
+        # lifecycle counters (AdapterPoolStats)
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
+        self.resident_hits = 0
+        self.installs = 0
+        self.evictions = 0
+        self.acquire_fails = 0
+        self.stalled_installs = 0
+
+    # ------------------------------------------------------------------
+    # registry
+    # ------------------------------------------------------------------
+    def register(self, spec: AdapterSpec, weights: Params) -> str:
+        """Register an adapter at any time; returns its ``uid``.
+
+        ``weights``: segment-stacked tree (``init_adapter_weights``
+        layout) of any rank ≤ the pool's slot rank."""
+        if spec.name in self._by_name:
+            raise ValueError(f"adapter {spec.name!r} already registered; "
+                             "unregister it first")
+        r = adapter_rank_of(weights)
+        if r > self.slot_rank:
+            raise ValueError(
+                f"adapter {spec.name!r} rank {r} exceeds the pool's slot "
+                f"rank bucket {self.slot_rank}; construct the engine with "
+                f"a larger EngineConfig.adapter_slot_rank")
+        ver = self._versions.get(spec.name, 0) + 1
+        self._versions[spec.name] = ver
+        uid = f"{spec.name}#v{ver}"
+        padded = pad_adapter_rank(weights, self.slot_rank)
+        host = [jax.tree.map(np.asarray, lw)
+                for lw in per_layer_adapters(self.cfg, padded)]
+        self._by_uid[uid] = AdapterRegistration(spec=spec, uid=uid,
+                                                host_layers=host)
+        self._by_name[spec.name] = uid
+        return uid
+
+    def unregister(self, name: str) -> None:
+        """Drop a registration.  Its slot (if resident) frees immediately;
+        stale weights are overwritten by the next install."""
+        uid = self._by_name.get(name)
+        if uid is None:
+            raise KeyError(name)
+        reg = self._by_uid[uid]
+        if reg.pins:
+            raise RuntimeError(f"adapter {uid} still pinned by "
+                               f"{reg.pins} running request(s)")
+        del self._by_name[name]
+        del self._by_uid[uid]
+        if reg.slot is not None:
+            self._free.append(reg.slot)
+            self._lru.pop(uid, None)
+
+    def uid_of(self, name: str) -> str:
+        return self._by_name[name]
+
+    def get(self, uid: str) -> AdapterRegistration:
+        return self._by_uid[uid]
+
+    @property
+    def registered(self) -> List[str]:
+        return list(self._by_name)
+
+    # ------------------------------------------------------------------
+    # residency
+    # ------------------------------------------------------------------
+    def prefetch(self, uid: str) -> None:
+        """Issue the async host→device transfer ahead of admission.
+        Idempotent: a no-op while the weights are already staged or
+        resident (the scheduler re-calls this every step for queued
+        requests)."""
+        reg = self._by_uid[uid]
+        if reg.slot is not None or reg.device_layers is not None:
+            return
+        reg.device_layers = [jax.tree.map(jax.device_put, lw)
+                             for lw in reg.host_layers]
+        self.prefetch_issued += 1
+
+    def acquire(self, uid: str) -> Optional[int]:
+        """Pin ``uid``'s slot for a scheduled request, installing it
+        first if needed.  Returns the slot index, or ``None`` when every
+        slot is pinned (caller queues behind eviction)."""
+        reg = self._by_uid[uid]
+        if reg.slot is None:
+            slot = self._take_slot()
+            if slot is None:
+                self.acquire_fails += 1
+                return None
+            if reg.device_layers is None:
+                # weights were never prefetched — the H2D copy is issued
+                # here, on the admission path (still async, but without
+                # the queue-time head start)
+                self.stalled_installs += 1
+                self.prefetch(uid)
+            else:
+                self.prefetch_hits += 1      # install found staged weights
+            self._install(reg, slot)
+        else:
+            self.resident_hits += 1
+        reg.pins += 1
+        self._lru[uid] = None
+        self._lru.move_to_end(uid)
+        return reg.slot
+
+    def release(self, uid: str) -> None:
+        """Unpin at request finish/preemption; slot stays warm."""
+        reg = self._by_uid[uid]
+        assert reg.pins > 0, f"release of unpinned adapter {uid}"
+        reg.pins -= 1
+
+    def _take_slot(self) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        for uid in self._lru:                # least recently acquired first
+            victim = self._by_uid[uid]
+            if victim.pins == 0:
+                self._lru.pop(uid)
+                slot, victim.slot = victim.slot, None
+                self.evictions += 1
+                return slot
+        return None
+
+    def _install(self, reg: AdapterRegistration, slot: int) -> None:
+        s = jnp.asarray(slot, jnp.int32)
+        for li, lw in enumerate(reg.device_layers):
+            self.layers[li] = jax.tree.map(
+                lambda pool, w: _slot_scatter(pool, w, s),
+                self.layers[li], lw)
+        # the staging copy has been scattered into the slot stack; drop
+        # it so residency costs one copy of the weights, not two
+        reg.device_layers = None
+        reg.slot = slot
+        self.installs += 1
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def pinned_slots(self) -> int:
+        return sum(1 for r in self._by_uid.values()
+                   if r.slot is not None and r.pins > 0)
+
+    def stats(self) -> AdapterPoolStats:
+        return AdapterPoolStats(
+            num_slots=self.num_slots,
+            num_registered=len(self._by_name),
+            occupancy=self.occupancy,
+            prefetch_issued=self.prefetch_issued,
+            prefetch_hits=self.prefetch_hits,
+            resident_hits=self.resident_hits,
+            installs=self.installs,
+            evictions=self.evictions,
+            acquire_fails=self.acquire_fails,
+            stalled_installs=self.stalled_installs,
+        )

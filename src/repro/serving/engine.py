@@ -21,6 +21,13 @@ Cross-model reuse appears in two places:
   the base model or sibling adapters (and vice versa);
 * every block filled — during prefill OR decode (generated tokens are
   cached too, paper §4.4) — is registered under its base-aligned hash.
+
+Adapters are a dynamic, paged resource (``serving/adapter_pool.py``):
+the registry can hold far more adapters than fit on device, and the
+scheduler is adapter-aware — waiting requests trigger async weight
+prefetch, admission pins a device slot (or queues behind eviction), and
+finish/preemption unpin it.  Block hashes salt on the registration uid,
+so slot recycling never aliases the prefix cache.
 """
 from __future__ import annotations
 
@@ -34,13 +41,16 @@ import numpy as np
 from repro.configs.base import ATTN, ModelConfig
 from repro.core.activation_mask import (adapter_index_for_positions,
                                         find_invocation_start)
-from repro.core.alora import AdapterSpec, stack_adapters
+from repro.core.alora import AdapterSpec
 from repro.core.block_hash import (block_extra, hash_block,
                                    request_block_hashes)
 from repro.core.kv_manager import BlockManager, OutOfBlocks
 from repro.core.prefix_cache import PrefixCache
 from repro.models.model import Runtime, period_segments
-from repro.serving.metrics import MetricsAggregate, aggregate
+from repro.serving.adapter_pool import (AdapterPool, AdapterRegistration,
+                                        rank_bucket)
+from repro.serving.metrics import (AdapterPoolStats, MetricsAggregate,
+                                   aggregate)
 from repro.serving.request import Request, State
 from repro.serving.runner import MixedBatch, ModelRunner, RunnerConfig
 
@@ -66,15 +76,23 @@ class EngineConfig:
     mixed_attn_impl: str = "ref"
     # ragged-SSD impl for the mixed step, same choices as above
     mixed_ssd_impl: str = "ref"
+    # grouped-LoRA delta for the mixed step: "ref" (ragged jnp over the
+    # step's active slots) | "pallas"/"pallas_interpret" (SGMV kernel) |
+    # "dense" (pre-pool full stacked scan; equivalence oracle)
+    mixed_lora_impl: str = "ref"
+    # ---- dynamic adapter pool (serving/adapter_pool.py) --------------
+    # device-resident adapter slots.  None -> one slot per adapter given
+    # at construction (everything resident, the pre-pool behavior);
+    # smaller values make admission cycle adapters through the slots
+    # (LRU eviction + async prefetch).
+    adapter_slots: Optional[int] = None
+    # rank bucket every adapter zero-pads into.  None -> pow2 bucket of
+    # the largest construction-time adapter rank (min 8).  Must be set
+    # explicitly if later registrations need a higher rank.
+    adapter_slot_rank: Optional[int] = None
     # execution-time model: clock advances by measured wall time of each
     # step, scaled by this factor (1.0 = honest CPU timing)
     time_scale: float = 1.0
-
-
-@dataclass
-class RegisteredAdapter:
-    spec: AdapterSpec
-    slot: int
 
 
 class Engine:
@@ -86,17 +104,23 @@ class Engine:
         self.ecfg = engine_cfg
         self.rt = rt
         adapters = adapters or []
-        self.adapters: Dict[str, RegisteredAdapter] = {}
-        weights = []
-        for i, (spec, w) in enumerate(adapters):
-            self.adapters[spec.name] = RegisteredAdapter(spec, i + 1)
-            weights.append(w)
-        if weights:
-            ranks = {spec.rank for spec, _ in adapters}
-            assert len(ranks) == 1, "engine stacks equal-rank adapters"
-            stacked = stack_adapters(cfg, weights, ranks.pop())
-        else:
-            stacked = None
+        # dynamic adapter pool: construction-time adapters are ordinary
+        # registrations; more can be registered/unregistered at any time
+        # and cycle through the fixed device slots (heterogeneous ranks
+        # zero-pad into the slot bucket — no equal-rank requirement)
+        self.adapter_pool: Optional[AdapterPool] = None
+        if adapters or engine_cfg.adapter_slots is not None:
+            n_slots = engine_cfg.adapter_slots \
+                if engine_cfg.adapter_slots is not None \
+                else max(len(adapters), 1)
+            slot_rank = engine_cfg.adapter_slot_rank \
+                if engine_cfg.adapter_slot_rank is not None \
+                else rank_bucket(max((s.rank for s, _ in adapters),
+                                     default=1))
+            self.adapter_pool = AdapterPool(cfg, num_slots=n_slots,
+                                            slot_rank=slot_rank)
+            for spec, w in adapters:
+                self.adapter_pool.register(spec, w)
 
         rcfg = RunnerConfig(
             block_size=engine_cfg.block_size,
@@ -105,8 +129,11 @@ class Engine:
             num_state_slots=engine_cfg.num_state_slots + 1,
             mixed_attn_impl=engine_cfg.mixed_attn_impl,
             mixed_ssd_impl=engine_cfg.mixed_ssd_impl,
+            mixed_lora_impl=engine_cfg.mixed_lora_impl,
         )
-        self.runner = ModelRunner(cfg, params, rcfg, stacked, rt)
+        self.runner = ModelRunner(
+            cfg, params, rcfg,
+            self.adapter_pool.layers if self.adapter_pool else None, rt)
 
         has_attn = self.runner.La > 0
         has_ssm = self.runner.Ls > 0
@@ -139,6 +166,46 @@ class Engine:
         self.use_mixed = engine_cfg.execution_mode == "mixed"
 
     # ------------------------------------------------------------------
+    # adapter lifecycle (delegates to the AdapterPool)
+    # ------------------------------------------------------------------
+    @property
+    def adapters(self) -> Dict[str, AdapterRegistration]:
+        """Currently-registered adapters, by name."""
+        pool = self.adapter_pool
+        if pool is None:
+            return {}
+        return {name: pool.get(pool.uid_of(name))
+                for name in pool.registered}
+
+    def register_adapter(self, spec: AdapterSpec, weights) -> str:
+        """Register an adapter at any time; returns its registry uid.
+        The engine may hold many more registrations than device slots —
+        residency is managed per admission."""
+        if self.adapter_pool is None:
+            raise RuntimeError(
+                "engine was built without an adapter pool; pass "
+                "adapters=... at construction or set "
+                "EngineConfig.adapter_slots")
+        return self.adapter_pool.register(spec, weights)
+
+    def unregister_adapter(self, name: str) -> None:
+        """Drop a registration.  Refuses while any live request (queued,
+        waiting or running) still references it."""
+        if self.adapter_pool is None:
+            raise KeyError(name)
+        uid = self.adapter_pool.uid_of(name)
+        for group in (self.running, self.waiting, self.pending):
+            if any(r.adapter_uid == uid for r in group):
+                raise RuntimeError(
+                    f"adapter {name!r} still referenced by live requests")
+        self.adapter_pool.unregister(name)
+
+    def adapter_pool_stats(self) -> AdapterPoolStats:
+        if self.adapter_pool is None:
+            return AdapterPoolStats()
+        return self.adapter_pool.stats()
+
+    # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -159,9 +226,14 @@ class Engine:
         )
         self._next_id += 1
         if adapter_name is not None:
-            ra = self.adapters[adapter_name]
+            pool = self.adapter_pool
+            if pool is None:
+                raise KeyError(adapter_name)
+            uid = pool.uid_of(adapter_name)
+            ra = pool.get(uid)
             req.adapter = ra.spec
-            req.adapter_slot = ra.slot
+            req.adapter_uid = uid       # stable cache identity; the
+            req.adapter_slot = 0        # device slot is pinned at admission
             if ra.spec.kind == "alora":
                 inv = find_invocation_start(req.prompt,
                                             ra.spec.invocation_tokens)
@@ -185,6 +257,8 @@ class Engine:
         if needs_slot and not self._free_slots:
             return False
 
+        adapter_pinned = False
+
         # prefix-cache match.  We match against prompt[:-1]: the last
         # prompt token must always be recomputed to produce first-token
         # logits, so the reuse boundary (KV blocks AND the SSM state
@@ -206,11 +280,15 @@ class Engine:
         def bail() -> bool:
             # single cleanup for every failure path: return everything
             # acquired so far — cache-matched blocks, partially
-            # allocated fresh blocks, and the state-snapshot ref
+            # allocated fresh blocks, the state-snapshot ref, and the
+            # adapter-slot pin (the slot stays resident/warm for retry)
             if self.kv_mgr is not None:
                 self.kv_mgr.release_all(kv_blocks + new_blocks)
             if state_slot is not None:
                 self.st_mgr.release(state_slot)
+            if adapter_pinned:
+                self.adapter_pool.release(req.adapter_uid)
+                req.adapter_slot = 0
             return False
 
         mgr = self.kv_mgr
@@ -223,6 +301,21 @@ class Engine:
             except OutOfBlocks:
                 return bail()
             req.block_ids = kv_blocks + new_blocks
+
+        # adapter admission charge, AFTER blocks so a block-side failure
+        # never pays an eviction+install for nothing: pin the adapter's
+        # device slot (installing it, evicting an LRU-unpinned slot if
+        # needed).  When every slot is pinned by running requests the
+        # admission fails — the request queues behind eviction, never
+        # behind a device sync.
+        if req.adapter_uid is not None:
+            slot = self.adapter_pool.acquire(req.adapter_uid)
+            if slot is None:
+                req.block_ids = []
+                return bail()
+            req.adapter_slot = slot
+            adapter_pinned = True
+
         req.n_computed = n_reuse
         req.n_cache_hit_tokens = n_reuse
         if needs_slot:
@@ -254,6 +347,15 @@ class Engine:
         # move due arrivals into the waiting queue
         while self.pending and self.pending[0].arrival_time <= self.clock:
             self.waiting.append(self.pending.pop(0))
+        # scheduler-driven adapter prefetch: issue the async host→device
+        # transfer for every adapter an admission-window request will
+        # need, so the weights are staged (or already in flight) by the
+        # time admission pins a slot below
+        if self.adapter_pool is not None:
+            window = max(self.ecfg.max_running - len(self.running), 0)
+            for r in self.waiting[:window]:
+                if r.adapter_uid is not None:
+                    self.adapter_pool.prefetch(r.adapter_uid)
         # idle: jump to the next arrival
         if not self.waiting and not self.running:
             if self.pending:
@@ -316,6 +418,9 @@ class Engine:
         if r.run_slot >= 0:
             self._free_slots.append(r.run_slot)
             r.run_slot = -1
+        if r.adapter_uid is not None and r.adapter_slot > 0:
+            self.adapter_pool.release(r.adapter_uid)
+            r.adapter_slot = 0
         r.n_computed = 0
         r.state_reused = False
         r.state = State.QUEUED
@@ -530,6 +635,12 @@ class Engine:
         if self.cfg.is_encoder_decoder:
             xkv_list = [(r.req_id, self._xkv[r.req_id]) for r in reqs]
 
+        # the step's active adapter slots (ascending, for the grouped-
+        # LoRA delta): every token's adapter_idx is either 0 or its
+        # request's pinned slot, so the per-request set covers the batch
+        active = sorted({r.adapter_slot for r in reqs
+                         if r.adapter_slot > 0})
+
         mb = MixedBatch(tok_ids=tok_ids, embeds=embeds,
                         use_embeds=use_embeds, positions=positions,
                         adapter_idx=adapter_idx, req_rows=req_rows,
@@ -537,7 +648,8 @@ class Engine:
                         write_offs=write_offs, block_tables=block_tables,
                         out_rows=out_rows, run_slots=run_slots,
                         snap_rows=np.asarray(snap_rows, np.int32),
-                        xkv_list=xkv_list)
+                        xkv_list=xkv_list,
+                        active_slots=np.asarray(active, np.int32))
         self.t_assembly += time.perf_counter() - t_host
         t0 = time.perf_counter()
         logits, boundary = self.runner.execute_batch(mb)  # one jitted call
@@ -637,6 +749,9 @@ class Engine:
                     self.kv_mgr.release_all(r.block_ids)
                 if r.run_slot >= 0:
                     self._free_slots.append(r.run_slot)
+                if r.adapter_uid is not None and r.adapter_slot > 0:
+                    self.adapter_pool.release(r.adapter_uid)
+                    r.adapter_slot = 0
                 self._xkv.pop(r.req_id, None)
                 self.done.append(r)
             else:

@@ -40,6 +40,29 @@ def aggregate(metrics: List[dict]) -> MetricsAggregate:
         throughput_tok_per_s=total_tokens / total_e2e if total_e2e else 0.0)
 
 
+@dataclass
+class AdapterPoolStats:
+    """Adapter-lifecycle counters (the Prometheus-gauge equivalents for
+    the dynamic adapter pool): how often weights moved, how full the
+    slot pool ran, and whether admission ever stalled on weights."""
+    num_slots: int = 0
+    num_registered: int = 0
+    occupancy: int = 0            # resident slots right now
+    prefetch_issued: int = 0      # async H2D transfers started
+    prefetch_hits: int = 0        # installs that found staged weights
+    resident_hits: int = 0        # acquire found the slot warm
+    installs: int = 0             # slot writes (scatter into the stack)
+    evictions: int = 0            # LRU slot reclaims
+    acquire_fails: int = 0        # admissions queued behind eviction
+    stalled_installs: int = 0     # installs whose H2D was never prefetched
+
+    def row(self) -> Dict[str, float]:
+        return {k: float(getattr(self, k)) for k in (
+            "num_slots", "num_registered", "occupancy", "prefetch_issued",
+            "prefetch_hits", "resident_hits", "installs", "evictions",
+            "acquire_fails", "stalled_installs")}
+
+
 def speedup_table(baseline: MetricsAggregate, ours: MetricsAggregate,
                   keys: Iterable[str] = ("e2e", "ttft", "queue", "prefill",
                                          "decode")) -> Dict[str, float]:

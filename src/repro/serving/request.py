@@ -35,7 +35,12 @@ class Request:
     prompt: List[int]                       # token ids used for hashing
     max_new_tokens: int
     adapter: Optional[AdapterSpec] = None
-    adapter_slot: int = 0                   # index into the engine's stack
+    # stable registry identity (name#vN) — what block hashes salt on.
+    # NEVER the slot index: slots are recycled across evictions, and the
+    # same name can be re-registered with different weights, so neither
+    # is a sound cache key.
+    adapter_uid: Optional[str] = None
+    adapter_slot: int = 0                   # device slot WHILE ADMITTED
     arrival_time: float = 0.0
     # multimodal stubs -------------------------------------------------------
     prefix_embeds: Optional[np.ndarray] = None   # vlm: (P, d) patch embeds
@@ -70,8 +75,8 @@ class Request:
     def adapter_key(self) -> Optional[AdapterKey]:
         if self.adapter is None:
             return None
-        return AdapterKey(self.adapter.name, self.adapter.kind,
-                          self.inv_start)
+        return AdapterKey(self.adapter_uid or self.adapter.name,
+                          self.adapter.kind, self.inv_start)
 
     def is_finished(self) -> bool:
         return len(self.output_tokens) >= self.max_new_tokens

@@ -65,6 +65,10 @@ class RunnerConfig:
     chunk_tokens: int = 64          # max prefill chunk (multiple of bs)
     mixed_attn_impl: str = "ref"    # "ref" | "pallas" | "pallas_interpret"
     mixed_ssd_impl: str = "ref"     # "ref" | "pallas" | "pallas_interpret"
+    # grouped-LoRA delta for the mixed step: "ref" (ragged jnp over the
+    # step's active slots) | "pallas"/"pallas_interpret" (SGMV kernel) |
+    # "dense" (the pre-pool full stacked scan; equivalence oracle)
+    mixed_lora_impl: str = "ref"
 
 
 @dataclass(frozen=True)
@@ -78,6 +82,7 @@ class RunnerSpec:
     rt: Runtime = Runtime()
     attn_impl: str = "ref"
     ssd_impl: str = "ref"
+    lora_impl: str = "ref"
 
 
 @dataclass
@@ -124,6 +129,9 @@ class MixedBatch:
     run_slots: np.ndarray
     snap_rows: np.ndarray
     xkv_list: Optional[List[Tuple]] = None
+    # ascending adapter-slot ids this step's tokens reference (grouped-
+    # LoRA active set); padded with 0 (zero adapter) to a pow2 bucket
+    active_slots: Optional[np.ndarray] = None
 
 
 def _chunk_attention(q, past_k, past_v, past_len, new_k, new_v,
@@ -274,9 +282,9 @@ def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
 @partial(jax.jit, static_argnums=0)
 def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
                 live_ssm, live_conv, tok_ids, embeds, use_embeds,
-                positions, q_lens, adapter_idx, block_tables, req_rows,
-                row_cols, write_bids, write_offs, out_rows, run_slots,
-                tok_slots, snap_rows, xkv):
+                positions, q_lens, adapter_idx, active_slots,
+                block_tables, req_rows, row_cols, write_bids, write_offs,
+                out_rows, run_slots, tok_slots, snap_rows, xkv):
     """One jitted step over the whole mixed batch — every architecture
     family shares this single device call:
 
@@ -312,7 +320,8 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
                 row_cols=row_cols, seg_ids=req_rows,
                 snap_rows=snap_rows, last_rows=out_rows,
                 row_slots=run_slots, alora=al, adapter_idx=adapter_idx,
-                impl=spec.ssd_impl)
+                impl=spec.ssd_impl, lora_impl=spec.lora_impl,
+                active_slots=active_slots)
             live_ssm = live_ssm.at[si].set(l_ssm)
             live_conv = live_conv.at[si].set(l_conv)
             boundary_ssm.append(sb_s)
@@ -321,7 +330,9 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
             si += 1
         else:
             h = Lyr.rmsnorm(x, lp["ln1"], cfg.norm_eps)
-            q, k, v = Lyr.qkv_project(lp["attn"], cfg, h, al, aidx2)
+            q, k, v = Lyr.qkv_project(lp["attn"], cfg, h, al, aidx2,
+                                      lora_impl=spec.lora_impl,
+                                      active_slots=active_slots)
             q = Lyr.apply_rope(q, pos2, cfg.rope_theta)
             k = Lyr.apply_rope(k, pos2, cfg.rope_theta)
             k_pool = k_pool.at[ai, write_bids, write_offs].set(k[0])
@@ -404,7 +415,13 @@ class HostBufferPool:
 
 class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, rcfg: RunnerConfig,
-                 stacked_adapters=None, rt: Runtime = Runtime()):
+                 adapter_layers: Optional[List[Any]] = None,
+                 rt: Runtime = Runtime()):
+        """``adapter_layers``: per-layer stacked adapter pytrees (leaves
+        with a leading slot axis) — normally the AdapterPool's live
+        ``layers`` list, whose entries the pool replaces in place as
+        adapters move through slots.  The runner keeps the list object
+        and re-reads it every step."""
         if cfg.ssm is not None and cfg.ssm.chunk_size != rcfg.block_size:
             # align SSD chunk boundaries with KV-block boundaries so state
             # snapshots land exactly on block-hash boundaries
@@ -425,7 +442,8 @@ class ModelRunner:
                                 window=self.window,
                                 kinds=tuple(self.kinds), rt=rt,
                                 attn_impl=rcfg.mixed_attn_impl,
-                                ssd_impl=rcfg.mixed_ssd_impl)
+                                ssd_impl=rcfg.mixed_ssd_impl,
+                                lora_impl=rcfg.mixed_lora_impl)
         self.host_bufs = HostBufferPool()
         self._xkv_stack = (None, None)   # (membership key, stacked xk/xv)
         # device-call accounting (what benchmarks/bench_mixed_batch.py
@@ -436,16 +454,11 @@ class ModelRunner:
         # the engine adds its packing time — the benchmark reports the sum
         self.t_assembly = 0.0
 
-        # per-layer adapter slices aligned with layer order
-        self.adapter_layers: List[Any] = []
-        if stacked_adapters is not None:
-            repeats, segs = M.period_segments(cfg)
-            for r in range(repeats):
-                for si, (kind, count) in enumerate(segs):
-                    seg = stacked_adapters[f"seg{si}"]
-                    for c in range(count):
-                        self.adapter_layers.append(
-                            jax.tree.map(lambda a: a[r, c], seg))
+        # per-layer adapter stacks aligned with layer order (the shared
+        # AdapterPool list, or inert Nones for adapter-free engines)
+        if adapter_layers is not None:
+            assert len(adapter_layers) == len(self.kinds)
+            self.adapter_layers = adapter_layers
         else:
             self.adapter_layers = [None] * len(self.kinds)
 
@@ -560,6 +573,13 @@ class ModelRunner:
         tok_slots[:T] = run_slots[rows[:T]]
         snap = take("snap", Cb, np.int32)
         snap[:C] = mb.snap_rows
+        # active adapter slots, pow2-bucketed; padding entries are slot 0
+        # (the zero adapter — an exact no-op term in the grouped delta)
+        acts = mb.active_slots if mb.active_slots is not None \
+            else np.zeros((0,), np.int32)
+        Ab = next_pow2(max(len(acts), 1))
+        act = take("act", Ab, np.int32)
+        act[:len(acts)] = acts
         xkv = self._stack_xkv(mb.xkv_list, Rb, dtype) \
             if mb.xkv_list is not None else None
         self.t_assembly += time.perf_counter() - t_host
@@ -571,10 +591,10 @@ class ModelRunner:
             self.v_pool, self.live_ssm, self.live_conv, jnp.asarray(tok),
             jnp.asarray(emb).astype(dtype), jnp.asarray(use),
             jnp.asarray(pos), jnp.asarray(qln), jnp.asarray(ad),
-            jnp.asarray(bt), jnp.asarray(rows), jnp.asarray(cols),
-            jnp.asarray(wb), jnp.asarray(wo), jnp.asarray(out_rows),
-            jnp.asarray(run_slots), jnp.asarray(tok_slots),
-            jnp.asarray(snap), xkv)
+            jnp.asarray(act), jnp.asarray(bt), jnp.asarray(rows),
+            jnp.asarray(cols), jnp.asarray(wb), jnp.asarray(wo),
+            jnp.asarray(out_rows), jnp.asarray(run_slots),
+            jnp.asarray(tok_slots), jnp.asarray(snap), xkv)
         boundary = None
         if self.Ls:
             self.live_ssm, self.live_conv = live_ssm, live_conv

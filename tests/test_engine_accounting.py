@@ -437,3 +437,53 @@ def test_preempt_releases_encoder_kv():
     assert victim.req_id not in eng._xkv
     eng.run_until_idle()
     assert not eng._xkv
+
+
+# ---------------------------------------------------------------------------
+# 7. adapter-pool accounting (dynamic adapter lifecycle)
+# ---------------------------------------------------------------------------
+def test_preemption_releases_adapter_pin(setup):
+    """Recompute-preemption must unpin the victim's adapter slot (it
+    re-pins at re-admission); after drain every pin is back to zero and
+    both execution modes emit identical tokens."""
+    outs = []
+    for mode in ("mixed", "sequential"):
+        eng = mk_engine(setup, execution_mode=mode, num_blocks=8,
+                        max_running=2, adapter_slots=1)
+        # 61 + 3 invocation tokens = 64 = exactly 4 blocks: the first
+        # decode token then needs a 5th block -> guaranteed starvation
+        rids = [eng.submit(prompt_of(61, seed=i) + list(INV), 4,
+                           adapter_name="uq") for i in range(2)]
+        rids.append(eng.submit(prompt_of(64, seed=9), 4))
+        eng.run_until_idle()
+        assert eng.preemptions > 0
+        assert eng.adapter_pool.pinned_slots() == 0
+        outs.append([eng.request(r).output_tokens for r in rids])
+    assert outs[0] == outs[1]
+    assert all(len(o) == 4 for o in outs[0])
+
+
+def test_budget_and_block_accounting_under_adapter_churn(setup):
+    """The PR-1 accounting invariants (budget cap, leak-free admission)
+    must hold while adapters cycle through a 1-slot pool."""
+    M = 24
+    eng = mk_engine(setup, max_batched_tokens=M, adapter_slots=1)
+    free0 = eng.kv_mgr.num_free()
+    rids = [eng.submit(prompt_of(20, seed=i) + list(INV), 6,
+                       adapter_name=("uq" if i % 2 else "lm"))
+            for i in range(5)]
+    prev = 0
+    for _ in range(400):
+        if not (eng.waiting or eng.running or eng.pending):
+            break
+        eng.step()
+        n_d, n_p = eng.last_step_tokens
+        if n_d > 0:
+            assert n_d + n_p <= M, (n_d, n_p)
+        assert prev + n_d + n_p <= 2 * M + eng.ecfg.block_size
+        prev = n_d + n_p
+    for r in rids:
+        assert len(eng.request(r).output_tokens) == 6
+    assert eng.adapter_pool.evictions > 0       # both adapters cycled
+    assert eng.adapter_pool.pinned_slots() == 0
+    assert eng.kv_mgr.num_free() == free0       # no block leaks

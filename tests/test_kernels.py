@@ -5,8 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import alora_qkv_op, paged_attention_op
+from repro.kernels.ops import (alora_qkv_op, paged_attention_op,
+                               ragged_lora_op)
+from repro.kernels.ragged_lora import ragged_grouped_lora_ref
 from repro.kernels.ref import alora_qkv_ref, paged_attention_ref
+from repro.models.layers import lora_delta
 
 KEY = jax.random.key(0)
 
@@ -137,3 +140,71 @@ def test_paged_attention_ignores_padding_blocks():
     o2 = paged_attention_op(q, kp, vp, bt2, ln, interpret=True)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ragged grouped-LoRA (SGMV-style, per-token slot indices)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("T,d,out,S,r,K", [
+    (64, 32, 48, 4, 8, 2),
+    (100, 64, 96, 6, 8, 4),       # padding path
+    (7, 32, 48, 3, 16, 2),        # tiny T
+    (33, 48, 64, 8, 32, 8),       # every slot active
+    (50, 32, 40, 4, 8, 1),        # single active slot
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_lora_sweep(T, d, out, S, r, K, dtype):
+    """Pallas grouped kernel vs jnp ref across shapes/dtypes; tokens
+    reference only a K-sized subset of the S+1 slot stack."""
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (T, d)).astype(dtype)
+    a = (jax.random.normal(ks[1], (S + 1, d, r)) * 0.1).astype(dtype)
+    a = a.at[0].set(0.0)                       # slot 0: zero adapter
+    b = (jax.random.normal(ks[2], (S + 1, r, out)) * 0.1).astype(dtype)
+    active = np.sort(np.random.RandomState(T).choice(
+        np.arange(1, S + 1), K, replace=False)).astype(np.int32)
+    Kb = 1 << (K - 1).bit_length() if K > 1 else 1
+    act = jnp.asarray(np.pad(active, (0, Kb - K)))   # pow2, 0-padded
+    choices = np.concatenate([[0], active])
+    idx = jnp.asarray(np.random.RandomState(T + 1).choice(choices, T),
+                      jnp.int32)
+    got = ragged_lora_op(x, a, b, idx, act, interpret=True)
+    want = ragged_grouped_lora_ref(x, a, b, idx, act)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ragged_lora_ref_matches_dense_scan_bitwise():
+    """The grouped ref sums active slots in ascending order; inactive
+    slots of the dense scan contribute exact zeros — the two must agree
+    BITWISE (this is what keeps mixed_lora_impl=ref token-identical to
+    the dense oracle)."""
+    T, d, out, S, r = 40, 32, 48, 6, 8
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (T, d))
+    a = (jax.random.normal(ks[1], (S + 1, d, r)) * 0.1).at[0].set(0.0)
+    b = jax.random.normal(ks[2], (S + 1, r, out)) * 0.1
+    idx = jnp.asarray(np.random.RandomState(3).choice([0, 2, 5], T),
+                      jnp.int32)
+    act = jnp.asarray([2, 5, 0, 0], jnp.int32)
+    dense = lora_delta(x, a, b, idx)
+    grouped = ragged_grouped_lora_ref(x, a, b, idx, act)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(grouped))
+
+
+def test_ragged_lora_inactive_slots_do_not_leak():
+    """Slots resident in the stack but absent from active_slots must not
+    contribute even for tokens (erroneously) indexing them — the grouped
+    delta only ever reads the active set."""
+    T, d, out, S, r = 16, 24, 32, 4, 8
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (T, d))
+    a = (jax.random.normal(ks[1], (S + 1, d, r))).at[0].set(0.0)
+    b = jax.random.normal(ks[2], (S + 1, r, out))
+    idx = jnp.full((T,), 3, jnp.int32)         # tokens point at slot 3
+    act = jnp.asarray([1, 0], jnp.int32)       # ...but only 1 is active
+    got = ragged_lora_op(x, a, b, idx, act, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((T, out),
+                                                            np.float32))
