@@ -15,23 +15,50 @@ capacity-doubling buffers (``HostBufferPool``); the
 ``REPRO_HOST_BUF_REUSE=0`` to re-measure with per-step reallocation (the
 pre-pool behavior) for an A/B of the ROADMAP "pinned buffer" item.
 
+``--mesh data=D,model=N`` adds a TP-sharded leg: the SAME mixed workload
+over an (D, N) host mesh (``EngineConfig.mesh``), reporting per-step
+latency and assembly time against the single-device mixed baseline and
+asserting the sharded invariants (token identity, 1.0 device-calls/step,
+zero post-warmup recompiles).  Needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=D*N``; on CPU the
+sharded leg is a correctness/invariant gauge, not a speed gauge — host
+meshes time collective overhead, real TP speedups need real chips.
+Appends one record per run to ``results/sharded_step.jsonl`` for
+``benchmarks/report.py``.
+
 ``--arch`` selects any registered architecture (default: the paper's
 granite base model); ``--smoke`` shrinks the workload for CI.  CI runs
 ``--arch mamba2-2.7b --smoke`` as the tiny-SSM smoke leg and checks the
-1.0-device-calls/step invariant this module asserts for mixed mode.
+1.0-device-calls/step invariant this module asserts for mixed mode; the
+``sharded`` CI leg runs ``--smoke --mesh data=2,model=4``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import emit, make_engine
 from repro.serving import EngineConfig
+from repro.serving import runner as runner_mod
 
 CONCURRENCY = 6
 PROMPT_LEN = 72
 GEN_LEN = 16
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def parse_mesh(s: str) -> dict:
+    """'model=4' | 'data=2,model=4' -> make_host_mesh kwargs."""
+    kw = {"data": 1, "model": 1}
+    for part in s.split(","):
+        k, v = part.split("=")
+        if k.strip() not in kw:
+            raise ValueError(f"unknown mesh axis {k!r} (data/model)")
+        kw[k.strip()] = int(v)
+    return kw
 
 
 def _workload(eng, seed: int, concurrency: int, prompt_len: int,
@@ -64,40 +91,84 @@ def _workload(eng, seed: int, concurrency: int, prompt_len: int,
     return rids, steps, mixed_steps, step_times
 
 
-def run(arch: str = "granite-3.2-8b", smoke: bool = False):
+def run(arch: str = "granite-3.2-8b", smoke: bool = False,
+        mesh: dict | None = None):
     concurrency = 3 if smoke else CONCURRENCY
     prompt_len = 24 if smoke else PROMPT_LEN
     gen_len = 8 if smoke else GEN_LEN
-    for mode in ("sequential", "mixed"):
+    modes = ["sequential", "mixed"] + (["mixed_sharded"] if mesh else [])
+    baseline_us = None            # single-device mixed mean step latency
+    mixed_tokens = None
+    for mode in modes:
+        ecfg_kw = dict(max_running=8, max_batched_tokens=128)
+        if mode == "mixed_sharded":
+            from repro.launch.mesh import make_host_mesh
+            ecfg_kw["mesh"] = make_host_mesh(**mesh)
+        else:
+            ecfg_kw["execution_mode"] = mode
         for seed in (999, 7):                     # warmup + measured
-            eng = make_engine(
-                "alora", arch=arch,
-                ecfg=EngineConfig(max_running=8, max_batched_tokens=128,
-                                  execution_mode=mode))
+            eng = make_engine("alora", arch=arch,
+                              ecfg=EngineConfig(**ecfg_kw))
+            if seed == 7 and mode == "mixed_sharded":
+                compiles_before = runner_mod.jit_cache_size()
             rids, steps, mixed_steps, times = _workload(
                 eng, seed, concurrency, prompt_len, gen_len)
         calls = eng.runner.num_device_calls
-        out_toks = sum(len(eng.request(r).output_tokens) for r in rids)
+        out = [eng.request(r).output_tokens for r in rids]
+        out_toks = sum(len(t) for t in out)
         assert out_toks == sum(gen_len for _ in rids)
-        if mode == "mixed" and not eng.cfg.is_encoder_decoder:
+        if mode == "mixed":
+            mixed_tokens = out
+            baseline_us = float(np.mean(times)) * 1e6
+        # keep emit()'s CSV name comma-free: 2x4 = (data=2, model=4)
+        tag = mode if mesh is None or mode != "mixed_sharded" else \
+            f"mixed@{mesh['data']}x{mesh['model']}"
+        if mode != "sequential" and not eng.cfg.is_encoder_decoder:
             # the unified-step invariant: one jitted call per work step
             assert calls == steps, (calls, steps)
-        emit(f"mixed_batch/{arch}/{mode}/step_latency",
+        emit(f"mixed_batch/{arch}/{tag}/step_latency",
              float(np.mean(times)) * 1e6,
              f"p50={np.median(times)*1e6:.0f}us "
              f"p99={np.percentile(times, 99)*1e6:.0f}us")
-        emit(f"mixed_batch/{arch}/{mode}/device_calls_per_step",
+        emit(f"mixed_batch/{arch}/{tag}/device_calls_per_step",
              calls / max(steps, 1),
              f"calls={calls} steps={steps} both_phase_steps={mixed_steps} "
              f"counts={eng.runner.call_counts}")
-        if mode == "mixed":
+        if mode != "sequential":
             # engine-side packing + runner-side bucket padding/stacking —
             # everything the HostBufferPool covers
             t_asm = eng.t_assembly + eng.runner.t_assembly
-            emit(f"mixed_batch/{arch}/{mode}/assembly_us_per_step",
+            emit(f"mixed_batch/{arch}/{tag}/assembly_us_per_step",
                  t_asm / max(steps, 1) * 1e6,
                  f"host batch-pack time (persistent buffers; set "
                  f"REPRO_HOST_BUF_REUSE=0 for the realloc baseline)")
+        if mode == "mixed_sharded":
+            # sharded invariants: token identity with the single-device
+            # mixed run, exactly one jitted call per work step (asserted
+            # above), zero post-warmup recompiles
+            assert out == mixed_tokens, \
+                "sharded mixed step diverged from single-device tokens"
+            recompiles = runner_mod.jit_cache_size() - compiles_before
+            assert recompiles == 0, \
+                f"{recompiles} post-warmup recompiles under sharding"
+            sharded_us = float(np.mean(times)) * 1e6
+            emit(f"mixed_batch/{arch}/{tag}/vs_single_device",
+                 sharded_us / baseline_us,
+                 f"sharded={sharded_us:.0f}us single={baseline_us:.0f}us "
+                 f"(host-mesh collective overhead; TP wins need real "
+                 f"chips)")
+            os.makedirs(RESULTS, exist_ok=True)
+            rec = dict(arch=arch, smoke=smoke,
+                       mesh=f"{mesh['data']}x{mesh['model']}",
+                       step_latency_us=sharded_us,
+                       baseline_us=baseline_us,
+                       assembly_us_per_step=t_asm / max(steps, 1) * 1e6,
+                       device_calls_per_step=calls / max(steps, 1),
+                       recompiles_after_warmup=recompiles,
+                       steps=steps)
+            with open(os.path.join(RESULTS, "sharded_step.jsonl"),
+                      "a") as f:
+                f.write(json.dumps(rec) + "\n")
 
 
 if __name__ == "__main__":
@@ -105,5 +176,11 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="granite-3.2-8b")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for CI smoke runs")
+    ap.add_argument("--mesh", default=None,
+                    help="add a TP-sharded mixed leg over a host mesh, "
+                         "e.g. 'model=4' or 'data=2,model=4' (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     args = ap.parse_args()
-    run(arch=args.arch, smoke=args.smoke)
+    run(arch=args.arch, smoke=args.smoke,
+        mesh=parse_mesh(args.mesh) if args.mesh else None)

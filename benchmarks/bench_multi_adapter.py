@@ -61,14 +61,6 @@ def run():
 # ---------------------------------------------------------------------------
 # adapter-churn leg (dynamic adapter lifecycle)
 # ---------------------------------------------------------------------------
-def _jit_cache_sizes() -> int:
-    """Total cached traces across the engine's jitted step functions —
-    the recompile counter the churn invariant is asserted on."""
-    return sum(f._cache_size() for f in (
-        runner_mod._mixed_impl, runner_mod._prefill_impl,
-        runner_mod._decode_impl, runner_mod._encode_impl))
-
-
 def _churn_workload(eng, *, n_adapters: int, reps: int, prompt_len: int,
                     gen_len: int, seed: int):
     rng = np.random.RandomState(seed)
@@ -116,7 +108,7 @@ def run_churn(arch: str, smoke: bool = False):
 
     eng = mk()
     _churn_workload(eng, seed=999, **kw)          # warmup (jit traces)
-    compiles_before = _jit_cache_sizes()
+    compiles_before = runner_mod.jit_cache_size()
     eng = mk()                                    # fresh pool, warm jit
     calls_before = eng.runner.num_device_calls
     rids, steps, times, occ = _churn_workload(eng, seed=7, **kw)
@@ -125,7 +117,7 @@ def run_churn(arch: str, smoke: bool = False):
     out = [eng.request(r).output_tokens for r in rids]
     assert out == oracle, "churn output diverged from all-resident oracle"
     assert calls == steps, (calls, steps)         # 1.0 device-calls/step
-    recompiles = _jit_cache_sizes() - compiles_before
+    recompiles = runner_mod.jit_cache_size() - compiles_before
     assert recompiles == 0, f"{recompiles} post-warmup recompiles"
     st = eng.adapter_pool_stats()
     assert st.evictions > 0, "churn never evicted — slots not scarce?"

@@ -108,6 +108,24 @@ def adapter_pool_table(recs):
               f"{r['occupancy_mean']:.2f} |")
 
 
+def sharded_step_table(recs):
+    """TP-sharded mixed-step runs (``bench_mixed_batch.py --mesh …``
+    appends one record per run).  Latency vs the single-device mixed
+    baseline of the same invocation; on host meshes the ratio gauges
+    collective overhead, not TP speedup."""
+    print("\n### Sharded mixed step — host-mesh runs\n")
+    print("| arch | mesh (data×model) | step (us) | single-dev (us) | "
+          "ratio | assembly (us) | calls/step | recompiles |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['arch']} | {r['mesh']} | "
+              f"{r['step_latency_us']:.0f} | {r['baseline_us']:.0f} | "
+              f"{r['step_latency_us']/r['baseline_us']:.2f}× | "
+              f"{r['assembly_us_per_step']:.0f} | "
+              f"{r['device_calls_per_step']:.2f} | "
+              f"{r['recompiles_after_warmup']} |")
+
+
 def main():
     pod = load(os.path.join(BASE, "dryrun_all.jsonl"))
     # dedup: last record per key wins
@@ -130,6 +148,13 @@ def main():
         for r in pool:
             latest[(r["arch"], r["smoke"])] = r
         adapter_pool_table(list(latest.values()))
+    sharded = load(os.path.join(BASE, "sharded_step.jsonl"))
+    if sharded:
+        # append-mode artifact: last record per (arch, mesh, smoke) wins
+        latest = {}
+        for r in sharded:
+            latest[(r["arch"], r["mesh"], r["smoke"])] = r
+        sharded_step_table(list(latest.values()))
 
 
 if __name__ == "__main__":

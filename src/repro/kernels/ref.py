@@ -4,6 +4,17 @@ CPU execution path).
 Each function here is the numerical ground truth its kernel twin in this
 package must match (``tests/test_kernels.py`` sweeps shapes/dtypes and
 asserts allclose in interpret mode).
+
+These refs are ALSO the TP-sharded serving path's compute: the sharded
+mixed step (``EngineConfig.mesh``) runs them under jit/GSPMD with the
+K/V pools split on their KV-head (or head_dim) dim and metadata
+replicated, so every op here must stay expressible as plain jnp — no
+``pallas_call``, no host callbacks, no per-device shape dependence —
+and partition cleanly along the head/head_dim axes (token/sequence axes
+carry replicated metadata gathers; contraction over a sharded head_dim
+psums).  The Pallas twins are single-device and are rejected by the
+runner when a mesh is configured; ``tests/test_sharded_step.py`` holds
+the refs to token-identical outputs under (data=2, model=4) sharding.
 """
 from __future__ import annotations
 

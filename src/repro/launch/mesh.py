@@ -32,7 +32,22 @@ def batch_axes_of(mesh: jax.sharding.Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
-def make_host_mesh() -> jax.sharding.Mesh:
-    """1-device mesh with the production axis names (CPU tests/examples)."""
-    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Host-scale ``(data, model)`` mesh with the production axis names.
+
+    The default ``(1, 1)`` is the historical 1-device CPU mesh for
+    tests/examples; nontrivial shapes (e.g. ``(2, 4)`` for the sharded
+    mixed-step equivalence suite) need the process started with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so enough
+    host devices exist BEFORE jax initializes.
+    """
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"host mesh (data={data}, model={model}) needs {n} devices, "
+            f"found {len(devices)} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before the first "
+            "jax import")
+    dev = np.asarray(devices[:n]).reshape(data, model)
     return jax.sharding.Mesh(dev, ("data", "model"))

@@ -88,12 +88,18 @@ def rank_bucket(rank: int, lo: int = 8) -> int:
     return v
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _slot_scatter(pool_leaf, w, slot):
+@partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _slot_scatter(pool_leaf, w, slot, out_sharding=None):
     """In-place slot write: donating the stack buffer lets XLA alias the
     output onto it, so an install costs O(one adapter's weights) instead
-    of a fresh copy of the whole (S+1)-wide stack per leaf."""
-    return pool_leaf.at[slot].set(w.astype(pool_leaf.dtype))
+    of a fresh copy of the whole (S+1)-wide stack per leaf.
+    ``out_sharding`` (sharded pools) pins the result to the slot-stack
+    layout so installs can never reshard the stack the jitted mixed step
+    was compiled against."""
+    out = pool_leaf.at[slot].set(w.astype(pool_leaf.dtype))
+    if out_sharding is not None:
+        out = jax.lax.with_sharding_constraint(out, out_sharding)
+    return out
 
 
 @dataclass
@@ -109,11 +115,13 @@ class AdapterRegistration:
 class AdapterPool:
     """Fixed device slot pool + host registry (see module docstring)."""
 
-    def __init__(self, cfg: ModelConfig, *, num_slots: int, slot_rank: int):
+    def __init__(self, cfg: ModelConfig, *, num_slots: int, slot_rank: int,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         assert num_slots >= 1 and slot_rank >= 1
         self.cfg = cfg
         self.num_slots = num_slots
         self.slot_rank = slot_rank
+        self.mesh = mesh
         # per-layer stacked tensors, leading dim num_slots+1, slot 0 zero.
         # THE list object is shared with the model runner — entries are
         # replaced in place on install, never the list itself.
@@ -122,6 +130,29 @@ class AdapterPool:
             lambda a: jnp.zeros(a.shape[:2] + (num_slots + 1,)
                                 + a.shape[2:], a.dtype), zero)
         self.layers: List[Params] = per_layer_adapters(cfg, stacked)
+        # TP layout over EngineConfig.mesh: A replicated, B column-
+        # parallel on its output dim (distributed.sharding, "Sharded
+        # serving").  _slot_shardings pin the stacks; _weight_shardings
+        # (the same specs minus the slot axis) are what prefetch
+        # device_puts host weights into — the staged copy already lives
+        # in the sharded slot layout, so an install is a local scatter.
+        self._slot_shardings: Optional[List[Params]] = None
+        self._weight_shardings: Optional[List[Params]] = None
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            from jax.sharding import PartitionSpec as P
+            self._slot_shardings, self._weight_shardings = [], []
+            for li, lw in enumerate(self.layers):
+                shape = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), lw)
+                specs = shd.adapter_slot_specs(cfg, shape, mesh=mesh)
+                named = shd.to_named(specs, mesh)
+                self.layers[li] = jax.device_put(lw, named)
+                self._slot_shardings.append(named)
+                self._weight_shardings.append(jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(
+                        mesh, P(*tuple(s)[1:])),
+                    specs, is_leaf=lambda x: isinstance(x, P)))
         self._by_uid: Dict[str, AdapterRegistration] = {}
         self._by_name: Dict[str, str] = {}
         self._versions: Dict[str, int] = {}
@@ -202,8 +233,16 @@ class AdapterPool:
         reg = self._by_uid[uid]
         if reg.slot is not None or reg.device_layers is not None:
             return
-        reg.device_layers = [jax.tree.map(jax.device_put, lw)
-                             for lw in reg.host_layers]
+        if self._weight_shardings is not None:
+            # sharded pool: stage the weights directly in the slot-stack
+            # layout (A replicated, B column-parallel) so the install
+            # scatter is shard-local
+            reg.device_layers = [
+                jax.tree.map(jax.device_put, lw, self._weight_shardings[li])
+                for li, lw in enumerate(reg.host_layers)]
+        else:
+            reg.device_layers = [jax.tree.map(jax.device_put, lw)
+                                 for lw in reg.host_layers]
         self.prefetch_issued += 1
 
     def acquire(self, uid: str) -> Optional[int]:
@@ -253,9 +292,14 @@ class AdapterPool:
     def _install(self, reg: AdapterRegistration, slot: int) -> None:
         s = jnp.asarray(slot, jnp.int32)
         for li, lw in enumerate(reg.device_layers):
-            self.layers[li] = jax.tree.map(
-                lambda pool, w: _slot_scatter(pool, w, s),
-                self.layers[li], lw)
+            if self._slot_shardings is not None:
+                self.layers[li] = jax.tree.map(
+                    lambda pool, w, osh: _slot_scatter(pool, w, s, osh),
+                    self.layers[li], lw, self._slot_shardings[li])
+            else:
+                self.layers[li] = jax.tree.map(
+                    lambda pool, w: _slot_scatter(pool, w, s),
+                    self.layers[li], lw)
         # the staging copy has been scattered into the slot stack; drop
         # it so residency costs one copy of the weights, not two
         reg.device_layers = None

@@ -93,6 +93,16 @@ class EngineConfig:
     # execution-time model: clock advances by measured wall time of each
     # step, scaled by this factor (1.0 = honest CPU timing)
     time_scale: float = 1.0
+    # ---- TP-sharded execution (distributed/sharding.py §Sharded serving)
+    # Shard the one jitted mixed step over this mesh: params tensor-
+    # parallel, the paged K/V pool on its KV-head dim, SSM pools on
+    # head/channel dims, adapter slot B stacks on their output dim, and
+    # per-token scheduler metadata replicated.  The host-side scheduler,
+    # block manager and adapter registry stay single-process.  None (the
+    # default) keeps the single-device path exactly as before.  Requires
+    # execution_mode="mixed" and the jnp "ref" kernel impls (GSPMD
+    # partitions them; Pallas kernels are single-device).
+    mesh: Optional[jax.sharding.Mesh] = None
 
 
 class Engine:
@@ -103,6 +113,12 @@ class Engine:
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.rt = rt
+        if engine_cfg.mesh is not None \
+                and engine_cfg.execution_mode != "mixed":
+            raise ValueError(
+                "sharded execution (EngineConfig.mesh) is built on the "
+                "one-call-per-step mixed path; execution_mode="
+                f"{engine_cfg.execution_mode!r} is single-device only")
         adapters = adapters or []
         # dynamic adapter pool: construction-time adapters are ordinary
         # registrations; more can be registered/unregistered at any time
@@ -118,7 +134,8 @@ class Engine:
                 else rank_bucket(max((s.rank for s, _ in adapters),
                                      default=1))
             self.adapter_pool = AdapterPool(cfg, num_slots=n_slots,
-                                            slot_rank=slot_rank)
+                                            slot_rank=slot_rank,
+                                            mesh=engine_cfg.mesh)
             for spec, w in adapters:
                 self.adapter_pool.register(spec, w)
 
@@ -133,7 +150,8 @@ class Engine:
         )
         self.runner = ModelRunner(
             cfg, params, rcfg,
-            self.adapter_pool.layers if self.adapter_pool else None, rt)
+            self.adapter_pool.layers if self.adapter_pool else None, rt,
+            mesh=engine_cfg.mesh)
 
         has_attn = self.runner.La > 0
         has_ssm = self.runner.Ls > 0

@@ -18,6 +18,14 @@ independent Engine instances over the same config share one compilation
 cache (the analogue of vLLM's CUDA-graph reuse across server restarts in
 a warm process).
 
+With a mesh (``EngineConfig.mesh``) the SAME single jitted step runs
+TP-sharded under GSPMD: params tensor-parallel, the paged K/V pool split
+on its KV-head (or head_dim) dim, SSM pools on their head/channel dims,
+adapter slot stacks column-parallel on B's output dim, and all per-token
+metadata replicated (``distributed.sharding`` §Sharded serving).  The
+static ``StepShardings`` in the spec pins output layouts so pools never
+reshard between steps; the host-side assembly below is untouched.
+
 Pools:
   k_pool/v_pool:     (La, NB, bs, KV, hd)   — last block id is a write
                                               dump for padded slots
@@ -38,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN, SSM, ModelConfig
+from repro.distributed import sharding as shd
+from repro.distributed.sharding import StepShardings
 from repro.kernels.ref import (packed_cross_attention_ref,
                                paged_attention_ref)
 from repro.models import attention as attn_dispatch
@@ -83,6 +93,10 @@ class RunnerSpec:
     attn_impl: str = "ref"
     ssd_impl: str = "ref"
     lora_impl: str = "ref"
+    # TP-sharded execution over EngineConfig.mesh: pins the output
+    # layouts of the mixed step (None = the single-device default path,
+    # traced exactly as before)
+    shard: Optional[StepShardings] = None
 
 
 @dataclass
@@ -301,8 +315,9 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
       projected encoder K/V, gathered per token by ``req_rows``.
     """
     cfg, rt = spec.cfg, spec.rt
-    x = jnp.where(use_embeds[:, None], embeds,
-                  params["embed"]["tok"][tok_ids])[None]     # (1, Tb, d)
+    tok_emb = params["embed"]["tok"][tok_ids]
+    x = jnp.where(use_embeds[:, None], embeds.astype(tok_emb.dtype),
+                  tok_emb)[None]                             # (1, Tb, d)
     Tb = tok_ids.shape[0]
     pos2 = positions[None]                                   # (1, Tb)
     aidx2 = adapter_idx[None]
@@ -340,6 +355,8 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
             o = attn_dispatch.ragged_paged_attention(
                 q[0], k_pool[ai], v_pool[ai], block_tables, req_rows,
                 q_lens, window=spec.window, impl=spec.attn_impl)
+            if spec.shard is not None:
+                o = spec.shard.constrain(o, spec.shard.attn_out)
             x = x + Lyr.out_project(lp["attn"], cfg, o[None])
             if cfg.is_encoder_decoder:
                 hx = Lyr.rmsnorm(x, lp["xln"], cfg.norm_eps)
@@ -354,6 +371,20 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
     logits = M.logits_for(params, cfg, x[0][out_rows])       # (Rb, V)
     b_ssm = jnp.stack(boundary_ssm) if boundary_ssm else 0
     b_conv = jnp.stack(boundary_conv) if boundary_conv else 0
+    if spec.shard is not None:
+        # pin the output layouts so the pools round-trip through the step
+        # with the exact sharding they were created with (no resharding
+        # between steps, no post-warmup recompiles); logits gather
+        # replicated — the step's single host-visible output
+        sh = spec.shard
+        k_pool = sh.constrain(k_pool, sh.kv_pool)
+        v_pool = sh.constrain(v_pool, sh.kv_pool)
+        live_ssm = sh.constrain(live_ssm, sh.ssm_pool)
+        live_conv = sh.constrain(live_conv, sh.conv_pool)
+        if boundary_ssm:
+            b_ssm = sh.constrain(b_ssm, sh.ssm_pool)
+            b_conv = sh.constrain(b_conv, sh.conv_pool)
+        logits = sh.constrain(logits, sh.replicated)
     return (k_pool, v_pool, live_ssm, live_conv, b_ssm, b_conv, logits)
 
 
@@ -371,6 +402,16 @@ def _encode_impl(spec: RunnerSpec, params, frames):
         xks.append(xk[0])
         xvs.append(xv[0])
     return jnp.stack(xks), jnp.stack(xvs)                # (La, Se, KV, hd)
+
+
+def jit_cache_size() -> int:
+    """Total cached traces across this module's jitted step functions —
+    the recompile counter the churn/sharding zero-post-warmup-recompile
+    invariants are asserted on (benchmarks + tests/test_sharded_step.py).
+    Lives here so adding a jitted impl can't silently escape counting.
+    """
+    return sum(f._cache_size() for f in (
+        _mixed_impl, _prefill_impl, _decode_impl, _encode_impl))
 
 
 # ---------------------------------------------------------------------------
@@ -416,12 +457,20 @@ class HostBufferPool:
 class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, rcfg: RunnerConfig,
                  adapter_layers: Optional[List[Any]] = None,
-                 rt: Runtime = Runtime()):
+                 rt: Runtime = Runtime(),
+                 mesh: Optional[jax.sharding.Mesh] = None):
         """``adapter_layers``: per-layer stacked adapter pytrees (leaves
         with a leading slot axis) — normally the AdapterPool's live
         ``layers`` list, whose entries the pool replaces in place as
         adapters move through slots.  The runner keeps the list object
-        and re-reads it every step."""
+        and re-reads it every step.
+
+        ``mesh``: TP-shard the mixed step over this mesh (see the
+        "Sharded serving" section of ``distributed.sharding``): params go
+        tensor-parallel, the paged K/V pool splits on its KV-head dim,
+        SSM pools on their head/channel dims, and per-step metadata is
+        replicated.  ``None`` keeps the single-device default path
+        byte-identical to before."""
         if cfg.ssm is not None and cfg.ssm.chunk_size != rcfg.block_size:
             # align SSD chunk boundaries with KV-block boundaries so state
             # snapshots land exactly on block-hash boundaries
@@ -431,6 +480,26 @@ class ModelRunner:
         self.cfg = cfg
         self.rcfg = rcfg
         self.rt = rt
+        self.mesh = mesh
+        self._shard: Optional[StepShardings] = None
+        self._meta_sharding = None
+        if mesh is not None:
+            allowed = (("attn", rcfg.mixed_attn_impl, ("ref",)),
+                       ("ssd", rcfg.mixed_ssd_impl, ("ref",)),
+                       ("lora", rcfg.mixed_lora_impl, ("ref", "dense")))
+            for kind_, impl, ok in allowed:
+                if impl not in ok:
+                    raise ValueError(
+                        f"mixed_{kind_}_impl={impl!r} is not usable under "
+                        f"a mesh (Pallas kernels are single-device); the "
+                        f"TP-sharded step requires one of {ok}, which "
+                        "GSPMD partitions over the mesh")
+            pshape = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+            pspecs = shd.param_specs_tree(cfg, pshape, mesh=mesh)
+            params = jax.device_put(params, shd.to_named(pspecs, mesh))
+            self._shard = shd.mixed_step_shardings(cfg, mesh)
+            self._meta_sharding = self._shard.named(self._shard.replicated)
         self.params = params
         self.kinds = [k for k, _ in M.iter_layers(params, cfg)]
         self.attn_ids = [i for i, k in enumerate(self.kinds) if k == ATTN]
@@ -443,7 +512,8 @@ class ModelRunner:
                                 kinds=tuple(self.kinds), rt=rt,
                                 attn_impl=rcfg.mixed_attn_impl,
                                 ssd_impl=rcfg.mixed_ssd_impl,
-                                lora_impl=rcfg.mixed_lora_impl)
+                                lora_impl=rcfg.mixed_lora_impl,
+                                shard=self._shard)
         self.host_bufs = HostBufferPool()
         self._xkv_stack = (None, None)   # (membership key, stacked xk/xv)
         # device-call accounting (what benchmarks/bench_mixed_batch.py
@@ -465,23 +535,53 @@ class ModelRunner:
         dtype = Lyr.dtype_of(cfg)
         bs, NB = rcfg.block_size, rcfg.num_blocks
         KV, hd = cfg.num_kv_heads, cfg.head_dim
-        self.k_pool = jnp.zeros((max(self.La, 1), NB, bs, KV, hd), dtype)
-        self.v_pool = jnp.zeros_like(self.k_pool)
+        self.k_pool = self._pool(
+            jnp.zeros((max(self.La, 1), NB, bs, KV, hd), dtype),
+            None if self._shard is None else self._shard.kv_pool)
+        self.v_pool = self._pool(
+            jnp.zeros_like(self.k_pool),
+            None if self._shard is None else self._shard.kv_pool)
         if self.Ls:
             s = cfg.ssm
             d_inner, nh, ch = ssm_lib.ssm_dims(cfg)
             MR, NS = rcfg.max_running, rcfg.num_state_slots
-            self.live_ssm = jnp.zeros((self.Ls, MR, nh, s.state_dim,
-                                       s.head_dim), jnp.float32)
-            self.live_conv = jnp.zeros((self.Ls, MR, s.conv_width - 1, ch),
-                                       dtype)
-            self.snap_ssm = jnp.zeros((self.Ls, NS, nh, s.state_dim,
-                                       s.head_dim), jnp.float32)
-            self.snap_conv = jnp.zeros((self.Ls, NS, s.conv_width - 1, ch),
-                                       dtype)
+            sh = self._shard
+            ssm_spec = None if sh is None else sh.ssm_pool
+            conv_spec = None if sh is None else sh.conv_pool
+            self.live_ssm = self._pool(
+                jnp.zeros((self.Ls, MR, nh, s.state_dim, s.head_dim),
+                          jnp.float32), ssm_spec)
+            self.live_conv = self._pool(
+                jnp.zeros((self.Ls, MR, s.conv_width - 1, ch), dtype),
+                conv_spec)
+            self.snap_ssm = self._pool(
+                jnp.zeros((self.Ls, NS, nh, s.state_dim, s.head_dim),
+                          jnp.float32), ssm_spec)
+            self.snap_conv = self._pool(
+                jnp.zeros((self.Ls, NS, s.conv_width - 1, ch), dtype),
+                conv_spec)
         else:
             self.live_ssm = self.live_conv = None
             self.snap_ssm = self.snap_conv = None
+
+    # ------------------------------------------------------------------
+    # sharded-execution helpers
+    # ------------------------------------------------------------------
+    def _pool(self, a: jax.Array, spec) -> jax.Array:
+        """Place a device pool in its step layout (no-op when unsharded)."""
+        if spec is None or self._shard is None:
+            return a
+        return jax.device_put(a, self._shard.named(spec))
+
+    def _dev(self, a):
+        """Stage per-step metadata on device — replicated over the mesh in
+        sharded mode, the plain default placement otherwise.  Accepts a
+        pytree: sharded mode issues ONE batched transfer for the whole
+        tree rather than a dispatch per array (the mixed step stages ~17
+        metadata arrays every step)."""
+        if self._meta_sharding is not None:
+            return jax.device_put(a, self._meta_sharding)
+        return jax.tree.map(jnp.asarray, a)
 
     # ------------------------------------------------------------------
     # embeddings
@@ -585,16 +685,13 @@ class ModelRunner:
         self.t_assembly += time.perf_counter() - t_host
 
         self.call_counts["mixed_step"] += 1
+        meta = self._dev((tok, emb, use, pos, qln, ad, act, bt, rows,
+                          cols, wb, wo, out_rows, run_slots, tok_slots,
+                          snap))
         (self.k_pool, self.v_pool, live_ssm, live_conv, b_ssm, b_conv,
          logits) = _mixed_impl(
             self._spec, self.params, self.adapter_layers, self.k_pool,
-            self.v_pool, self.live_ssm, self.live_conv, jnp.asarray(tok),
-            jnp.asarray(emb).astype(dtype), jnp.asarray(use),
-            jnp.asarray(pos), jnp.asarray(qln), jnp.asarray(ad),
-            jnp.asarray(act), jnp.asarray(bt), jnp.asarray(rows),
-            jnp.asarray(cols), jnp.asarray(wb), jnp.asarray(wo),
-            jnp.asarray(out_rows), jnp.asarray(run_slots),
-            jnp.asarray(tok_slots), jnp.asarray(snap), xkv)
+            self.v_pool, self.live_ssm, self.live_conv, *meta, xkv)
         boundary = None
         if self.Ls:
             self.live_ssm, self.live_conv = live_ssm, live_conv
@@ -620,7 +717,7 @@ class ModelRunner:
         for i, (_, (k_, v_)) in enumerate(xkv_list):
             xk[:, i] = np.asarray(k_)
             xv[:, i] = np.asarray(v_)
-        stacked = (jnp.asarray(xk), jnp.asarray(xv))
+        stacked = (self._dev(xk), self._dev(xv))
         self._xkv_stack = (key, stacked)
         return stacked
 

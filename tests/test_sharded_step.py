@@ -1,0 +1,217 @@
+"""Sharded ≡ unsharded equivalence of the ONE jitted mixed ragged step.
+
+The TP-sharded serving path (``EngineConfig.mesh``) must be a pure
+layout change: running the same workload on a ``(data=2, model=4)`` host
+mesh has to produce token-for-token identical outputs to the
+single-device default path — across architecture families (attention,
+SSM, encoder-decoder), with dynamic adapter churn, recompute-preemption
+and prefix-cache reuse in the loop — while keeping the mixed path's
+1.0-device-calls-per-step and zero-post-warmup-recompile invariants.
+
+This module needs 8 host devices; the CI ``sharded`` leg runs it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported before
+jax initializes.  Under the plain tier-1 invocation (1 device) every
+test skips.
+"""
+import jax
+import numpy as np
+import pytest
+
+if jax.device_count() < 8:
+    pytest.skip(
+        "sharded-step suite needs 8 host devices — run with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI "
+        "'sharded' leg)", allow_module_level=True)
+
+from repro.configs import get_reduced
+from repro.core.alora import AdapterSpec, init_adapter_weights
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params
+from repro.serving import Engine, EngineConfig
+from repro.serving import runner as runner_mod
+
+KEY = jax.random.key(0)
+INV = (7, 8, 9)
+ARCHS = ["granite-3.2-8b", "mamba2-2.7b", "whisper-large-v3"]
+
+
+def scaled_adapter(cfg, seed, rank=8, scale=30.0):
+    """Adapter with amplified B so adapted tokens actually diverge from
+    the base model's (random-init B is too small to flip argmaxes)."""
+    w = init_adapter_weights(jax.random.key(seed), cfg, rank)
+    return {seg: {k: (v * scale if k.startswith("b") else v)
+                  for k, v in leaves.items()}
+            for seg, leaves in w.items()}
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    """Lazily-built (cfg, params, adapters) per arch, shared across the
+    module so each family compiles once."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_reduced(arch)
+            params = init_params(KEY, cfg)
+            ads = [(AdapterSpec(f"ad{i}", rank=8,
+                                invocation_tokens=INV if i % 2 else None),
+                    scaled_adapter(cfg, 100 + i))
+                   for i in range(3)]
+            cache[arch] = (cfg, params, ads)
+        return cache[arch]
+
+    return get
+
+
+def mk_engine(zoo, arch, mesh, **ecfg_kw):
+    cfg, params, ads = zoo(arch)
+    kw = dict(max_running=4, max_batched_tokens=64, adapter_slots=2,
+              mesh=mesh)
+    kw.update(ecfg_kw)
+    return Engine(cfg, params, adapters=ads, engine_cfg=EngineConfig(**kw))
+
+
+def run_workload(eng, *, n=5, gen=6, prompt_len=40, seed=5):
+    """Deterministic mixed workload: staggered arrivals (prefill/decode
+    overlap), an adapter mix cycling through MORE adapters than device
+    slots (churn), and one identical-prompt pair (prefix-cache reuse).
+    Returns (tokens per request, stats)."""
+    cfg = eng.cfg
+    rng = np.random.RandomState(seed)
+    shared = list(rng.randint(10, 500, prompt_len))
+    rids = []
+    for i in range(n):
+        prompt = shared if i < 2 else \
+            list(rng.randint(10, 500, prompt_len + 8 * (i % 3)))
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw = dict(frame_embeds=np.random.RandomState(77).randn(
+                cfg.encoder_seq_len, cfg.d_model).astype(np.float32))
+        names = [None, "ad0", "ad1", "ad2"]
+        rids.append(eng.submit(list(prompt), gen,
+                               adapter_name=names[i % len(names)],
+                               arrival_time=1e-9 * i, **kw))
+    steps = 0
+    calls0 = eng.runner.call_counts["mixed_step"]
+    while eng.pending or eng.waiting or eng.running:
+        eng.step()
+        if any(eng.last_step_tokens):
+            steps += 1
+    # second wave: an aLoRA request re-sends the shared prompt AFTER the
+    # base request's blocks are registered — the paper's cross-model
+    # prefix reuse (base-aligned hashes) must hit under sharding too
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw = dict(frame_embeds=np.random.RandomState(77).randn(
+            cfg.encoder_seq_len, cfg.d_model).astype(np.float32))
+    rids.append(eng.submit(list(shared), gen, adapter_name="ad1", **kw))
+    while eng.pending or eng.waiting or eng.running:
+        eng.step()
+        if any(eng.last_step_tokens):
+            steps += 1
+    stats = dict(
+        steps=steps,
+        mixed_calls=eng.runner.call_counts["mixed_step"] - calls0,
+        preemptions=eng.preemptions,
+        hits=[eng.request(r).n_cache_hit_tokens for r in rids],
+        evictions=eng.adapter_pool_stats().evictions,
+    )
+    return [eng.request(r).output_tokens for r in rids], stats
+
+
+# ---------------------------------------------------------------------------
+# token-for-token equivalence per architecture family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_sharded_matches_single_device(zoo, arch):
+    """(data=2, model=4) mixed step ≡ single-device mixed step, token for
+    token, under adapter churn + prefix reuse; exactly one jitted mixed
+    call per work step on the sharded side."""
+    base_toks, base_st = run_workload(mk_engine(zoo, arch, None))
+    mesh = make_host_mesh(data=2, model=4)
+    sh_toks, sh_st = run_workload(mk_engine(zoo, arch, mesh))
+    assert sh_toks == base_toks
+    assert all(t for t in sh_toks)
+    # scheduling is device-layout independent: identical cache hits,
+    # churn and step counts on both sides
+    assert sh_st["hits"] == base_st["hits"]
+    assert sh_st["steps"] == base_st["steps"]
+    # the second-wave aLoRA request actually reused the base request's
+    # registered prefix blocks (cross-model reuse under sharding) …
+    assert sh_st["hits"][-1] > 0
+    # … and 3 adapters cycled through 2 slots (real churn)
+    assert sh_st["evictions"] > 0
+    # the unified-step invariant survives sharding
+    assert sh_st["mixed_calls"] == sh_st["steps"]
+
+
+def test_preemption_recompute_equivalence(zoo):
+    """Block starvation → recompute-preemption fires on BOTH sides at the
+    same step and the re-prefill (through the prefix cache) reproduces
+    identical tokens under sharding.  Equal-length prompts with a pool
+    sized to exactly the running prompts make every running request hit
+    its next block boundary in the SAME step with zero free blocks — the
+    zero-progress condition the preemption path requires."""
+
+    def run(mesh):
+        eng = mk_engine(zoo, "granite-3.2-8b", mesh, num_blocks=8,
+                        max_running=2)
+        rng = np.random.RandomState(11)
+        prompts = [list(rng.randint(10, 500, 64)) for _ in range(3)]
+        rids = [eng.submit(p, 8, adapter_name="ad1" if i == 1 else None)
+                for i, p in enumerate(prompts)]
+        eng.run_until_idle()
+        return ([eng.request(r).output_tokens for r in rids],
+                eng.preemptions)
+
+    base_toks, base_pre = run(None)
+    sh_toks, sh_pre = run(make_host_mesh(data=2, model=4))
+    assert base_pre > 0, "workload never preempted"
+    assert sh_pre == base_pre
+    assert sh_toks == base_toks
+
+
+# ---------------------------------------------------------------------------
+# compile-cache discipline under sharding
+# ---------------------------------------------------------------------------
+def test_zero_postwarmup_recompiles_sharded(zoo):
+    """A fresh sharded engine over the same config re-uses every trace of
+    a previous one (module-level jit + value-equal mesh/shardings): zero
+    new compiles, 1.0 device-calls/step."""
+    mesh = make_host_mesh(data=2, model=4)
+    run_workload(mk_engine(zoo, "granite-3.2-8b", mesh))      # warmup
+    before = runner_mod.jit_cache_size()
+    toks, st = run_workload(
+        mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4)))
+    assert runner_mod.jit_cache_size() - before == 0, \
+        "post-warmup recompiles"
+    assert st["mixed_calls"] == st["steps"]
+
+
+# ---------------------------------------------------------------------------
+# knob validation / default-path isolation
+# ---------------------------------------------------------------------------
+def test_sequential_mode_rejected_under_mesh(zoo):
+    with pytest.raises(ValueError, match="mixed"):
+        mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4),
+                  execution_mode="sequential")
+
+
+def test_pallas_impls_rejected_under_mesh(zoo):
+    with pytest.raises(ValueError, match="Pallas"):
+        mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4),
+                  mixed_attn_impl="pallas_interpret")
+
+
+def test_default_engine_stays_single_device(zoo):
+    """mesh=None on a multi-device host keeps everything on one device —
+    the pre-sharding behavior, byte for byte."""
+    eng = mk_engine(zoo, "granite-3.2-8b", None)
+    assert eng.runner.mesh is None and eng.runner._shard is None
+    assert len(eng.runner.k_pool.devices()) == 1
+
+
+def test_host_mesh_validates_device_count():
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_host_mesh(data=1000, model=1000)

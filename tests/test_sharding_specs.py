@@ -1,0 +1,218 @@
+"""Property tests for the sharding spec trees (hypothesis; skip without).
+
+The sharded serving path trusts ``distributed.sharding`` to hand back
+layouts that actually lower: every sharded dim must divide its mesh-axis
+product, for EVERY config in ``src/repro/configs`` and every mesh shape
+we claim (host test meshes through the production pod meshes).  The
+``mesh=`` parameter added for the TP-sharded mixed step guarantees this
+by construction (non-divisible dims fall back to replicated) — these
+properties pin that contract, plus the ``to_named`` round-trip and the
+adapter rank-bucket padding invariants.
+"""
+import functools
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import all_configs, get_config, get_reduced
+from repro.core.alora import adapter_param_specs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import init_decode_caches, param_specs
+from repro.serving.adapter_pool import rank_bucket
+
+ARCHS = sorted(all_configs())
+# host equivalence meshes → the production pod meshes (launch/mesh.py)
+MESHES = [
+    {"data": 1, "model": 1},
+    {"data": 2, "model": 4},
+    {"data": 1, "model": 8},
+    {"data": 16, "model": 16},
+    {"pod": 2, "data": 16, "model": 16},
+]
+
+COMMON = dict(deadline=None, max_examples=25,
+              suppress_health_check=[HealthCheck.data_too_large])
+
+
+@functools.lru_cache(maxsize=None)
+def _cfg(arch, reduced):
+    return get_reduced(arch) if reduced else get_config(arch)
+
+
+@functools.lru_cache(maxsize=None)
+def _params_shape(arch, reduced):
+    return param_specs(_cfg(arch, reduced))
+
+
+@functools.lru_cache(maxsize=None)
+def _caches_shape(arch, reduced):
+    cfg = _cfg(arch, reduced)
+    return jax.eval_shape(lambda: init_decode_caches(cfg, 2, 64))
+
+
+@functools.lru_cache(maxsize=None)
+def _adapter_shape(arch, reduced, rank, n):
+    return adapter_param_specs(_cfg(arch, reduced), rank, n)
+
+
+def assert_divides(spec_tree, shape_tree, sizes):
+    """Every sharded dim of every leaf divides its axis product."""
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(shape_tree)
+    assert len(specs) == len(leaves)
+    for sp, leaf in zip(specs, leaves):
+        dims = list(sp) + [None] * (len(leaf.shape) - len(sp))
+        assert len(dims) == len(leaf.shape), (sp, leaf.shape)
+        for d, ax in zip(leaf.shape, dims):
+            if ax is None:
+                continue
+            n = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                n *= sizes[a]
+            assert d % n == 0, (sp, leaf.shape, ax, n)
+
+
+# ---------------------------------------------------------------------------
+# divisibility: mesh-validated spec trees always lower
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), mesh=st.sampled_from(MESHES),
+       reduced=st.booleans())
+def test_param_specs_divide(arch, mesh, reduced):
+    cfg = _cfg(arch, reduced)
+    shape = _params_shape(arch, reduced)
+    specs = shd.param_specs_tree(cfg, shape, mesh=mesh)
+    assert_divides(specs, shape, mesh)
+
+
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), mesh=st.sampled_from(MESHES),
+       rank=st.sampled_from([4, 8, 32]), n=st.integers(1, 5))
+def test_adapter_specs_divide(arch, mesh, rank, n):
+    """Stacked-adapter trees (and the pool's per-layer slot stacks, which
+    reuse the same leaf rules through ``adapter_slot_specs``): A always
+    replicated, B sharded only where its output dim divides."""
+    cfg = _cfg(arch, True)
+    shape = _adapter_shape(arch, True, rank, n)
+    specs = shd.adapter_specs_tree(cfg, shape, mesh=mesh)
+    assert_divides(specs, shape, mesh)
+    # A factors ((..., d, r) leaves) are replicated — rank ≪ d never pays
+    # a collective
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    for path, sp in flat:
+        name = str(path[-1].key)
+        if name.startswith("a"):
+            assert all(ax is None for ax in sp), (name, sp)
+
+
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), mesh=st.sampled_from(MESHES),
+       reduced=st.booleans())
+def test_cache_specs_divide(arch, mesh, reduced):
+    """Dense decode-cache trees resolve heads-vs-head_dim against the
+    actual mesh; valid combos always divide."""
+    cfg = _cfg(arch, reduced)
+    ms = mesh["model"]
+    if not (cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0
+            or cfg.head_dim % ms == 0):
+        pytest.skip("arch does not support this model-axis width")
+    shape = _caches_shape(arch, reduced)
+    specs = shd.cache_specs_tree(cfg, shape, mesh, batch_axes=("data",),
+                                 batch_shardable=False)
+    assert_divides(specs, shape, mesh)
+    # the scalar helper shares the per-leaf tree's heads-vs-head_dim rule
+    kv = shd.kv_cache_spec(cfg, ("data",), "model", batch_shardable=False,
+                           mesh=mesh)
+    assert (tuple(kv)[4] == "model") == (
+        cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0)
+
+
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), mesh=st.sampled_from(MESHES))
+def test_mixed_step_shardings_divide(arch, mesh):
+    """The serving pools' StepShardings divide the actual pool dims the
+    runner allocates (block_size 16, pow2 pool sizes)."""
+    cfg = _cfg(arch, True)
+    ms = mesh["model"]
+    if not (cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0
+            or cfg.head_dim % ms == 0):
+        pytest.skip("arch does not support this model-axis width")
+    sh = shd.mixed_step_shardings(cfg, mesh)
+    kv_shape = (max(cfg.num_attn_layers(), 1), 64, 16, cfg.num_kv_heads,
+                cfg.head_dim)
+    assert_divides(sh.kv_pool, [jax.ShapeDtypeStruct(kv_shape, "f4")], mesh)
+    if cfg.num_ssm_layers():
+        from repro.models.ssm import ssm_dims
+        _, nh, ch = ssm_dims(cfg)
+        s = cfg.ssm
+        assert_divides(sh.ssm_pool, [jax.ShapeDtypeStruct(
+            (cfg.num_ssm_layers(), 8, nh, s.state_dim, s.head_dim), "f4")],
+            mesh)
+        assert_divides(sh.conv_pool, [jax.ShapeDtypeStruct(
+            (cfg.num_ssm_layers(), 8, s.conv_width - 1, ch), "f4")], mesh)
+
+
+# ---------------------------------------------------------------------------
+# to_named round-trip on a real mesh
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS))
+def test_to_named_round_trips(arch):
+    """to_named wraps every P into a NamedSharding on the mesh, keeping
+    tree structure and spec values (the spec is recoverable leaf for
+    leaf) — on every config in src/repro/configs/."""
+    cfg = _cfg(arch, True)
+    shape = _params_shape(arch, True)
+    mesh = make_host_mesh()
+    specs = shd.param_specs_tree(cfg, shape, mesh=mesh)
+    named = shd.to_named(specs, mesh)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_n = jax.tree.leaves(
+        named, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+    assert len(flat_s) == len(flat_n)
+    for sp, ns in zip(flat_s, flat_n):
+        assert isinstance(ns, jax.sharding.NamedSharding)
+        assert ns.mesh == mesh
+        assert tuple(ns.spec) == tuple(sp)
+    assert jax.tree.structure(
+        named, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)
+    ) == jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# rank-bucket padding invariants (the slot shape every adapter pads into)
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(rank=st.integers(1, 96))
+def test_rank_bucket_properties(rank):
+    b = rank_bucket(rank)
+    assert b >= 8 and b >= rank
+    assert b & (b - 1) == 0                    # pow2
+    assert b < 2 * max(rank, 8)                # tight: no over-padding
+
+
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), rank=st.integers(1, 32))
+def test_rank_padding_fills_bucket(arch, rank):
+    """pad_adapter_rank lands every adapter exactly on the bucket shape:
+    A widens on its last dim, B on its second-to-last, nothing else."""
+    from repro.core.alora import pad_adapter_rank
+    cfg = _cfg(arch, True)
+    bucket = rank_bucket(rank)
+    w = _adapter_shape(arch, True, rank, 0)    # n=0 ⇒ only the zero slot
+    padded = jax.eval_shape(lambda t: pad_adapter_rank(t, bucket), w)
+    flat_w, _ = jax.tree_util.tree_flatten_with_path(w)
+    flat_p = jax.tree.leaves(padded)
+    for (path, lw), lp in zip(flat_w, flat_p):
+        name = str(path[-1].key)
+        axis = -1 if name.startswith("a") else -2
+        expect = list(lw.shape)
+        expect[axis] += bucket - rank
+        assert list(lp.shape) == expect, (name, lw.shape, lp.shape)
