@@ -26,11 +26,22 @@ meshes time collective overhead, real TP speedups need real chips.
 Appends one record per run to ``results/sharded_step.jsonl`` for
 ``benchmarks/report.py``.
 
+``--async`` adds an async-submission leg (``EngineConfig.
+async_submission``, the schedule → submit → retire pipeline): the same
+workload with one-step-lookahead submission, asserting the async
+invariants — token identity with the synchronous mixed oracle, 1.0
+device-calls/step, every non-first work step assembled while the
+previous step was still in flight (host work hidden under device
+compute), and a device→host payload of SAMPLED int32 IDS ONLY (the
+``(R, vocab)`` logits never cross on the decode path; checked against
+the runner's ``d2h_fetches`` log).
+
 ``--arch`` selects any registered architecture (default: the paper's
 granite base model); ``--smoke`` shrinks the workload for CI.  CI runs
 ``--arch mamba2-2.7b --smoke`` as the tiny-SSM smoke leg and checks the
 1.0-device-calls/step invariant this module asserts for mixed mode; the
-``sharded`` CI leg runs ``--smoke --mesh data=2,model=4``.
+``sharded`` CI leg runs ``--smoke --mesh data=2,model=4``; the
+``async`` leg runs ``--smoke --async``.
 """
 from __future__ import annotations
 
@@ -92,11 +103,18 @@ def _workload(eng, seed: int, concurrency: int, prompt_len: int,
 
 
 def run(arch: str = "granite-3.2-8b", smoke: bool = False,
-        mesh: dict | None = None):
+        mesh: dict | None = None, async_leg: bool = False):
     concurrency = 3 if smoke else CONCURRENCY
     prompt_len = 24 if smoke else PROMPT_LEN
     gen_len = 8 if smoke else GEN_LEN
-    modes = ["sequential", "mixed"] + (["mixed_sharded"] if mesh else [])
+    # "mixed" is pinned to the SYNCHRONOUS oracle (async_submission off)
+    # so the async and sharded legs have a baseline to be token-checked
+    # against; "mixed_async" (--async) runs the one-step-lookahead
+    # pipeline; "mixed_sharded" (--mesh) keeps the async default ON —
+    # the async × TP-sharded combination.
+    modes = ["sequential", "mixed"] \
+        + (["mixed_async"] if async_leg else []) \
+        + (["mixed_sharded"] if mesh else [])
     baseline_us = None            # single-device mixed mean step latency
     mixed_tokens = None
     for mode in modes:
@@ -104,8 +122,11 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
         if mode == "mixed_sharded":
             from repro.launch.mesh import make_host_mesh
             ecfg_kw["mesh"] = make_host_mesh(**mesh)
+        elif mode == "mixed_async":
+            pass                            # defaults: mixed + async on
         else:
             ecfg_kw["execution_mode"] = mode
+            ecfg_kw["async_submission"] = False
         for seed in (999, 7):                     # warmup + measured
             eng = make_engine("alora", arch=arch,
                               ecfg=EngineConfig(**ecfg_kw))
@@ -142,6 +163,29 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
                  t_asm / max(steps, 1) * 1e6,
                  f"host batch-pack time (persistent buffers; set "
                  f"REPRO_HOST_BUF_REUSE=0 for the realloc baseline)")
+        if mode == "mixed_async":
+            # async invariants: token identity with the synchronous
+            # mixed oracle; every work step after the first assembled
+            # while the previous step was still in flight; the D2H
+            # payload is sampled int32 ids only — never (R, vocab)
+            # logits (no full-logits transfer on the decode path)
+            assert out == mixed_tokens, \
+                "async submission diverged from the sync mixed oracle"
+            overlap = eng.async_overlap_steps
+            assert overlap >= steps - 2, (overlap, steps)
+            fetches = eng.runner.d2h_fetches
+            assert fetches and all(d == "int32" for _, d in fetches), \
+                [d for _, d in fetches[:4]]
+            max_elems = max(e for e, _ in fetches)
+            assert max_elems < eng.cfg.vocab_size, \
+                f"per-step D2H of {max_elems} elems looks like logits"
+            async_us = float(np.mean(times)) * 1e6
+            emit(f"mixed_batch/{arch}/{tag}/vs_sync_submission",
+                 async_us / baseline_us,
+                 f"async={async_us:.0f}us sync={baseline_us:.0f}us "
+                 f"overlapped={overlap}/{steps} steps "
+                 f"d2h_max={max_elems} int32 elems/step (ids, not "
+                 f"logits)")
         if mode == "mixed_sharded":
             # sharded invariants: token identity with the single-device
             # mixed run, exactly one jitted call per work step (asserted
@@ -176,6 +220,11 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="granite-3.2-8b")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for CI smoke runs")
+    ap.add_argument("--async", dest="async_leg", action="store_true",
+                    help="add an async-submission leg (one-step "
+                         "lookahead) checked token-for-token against "
+                         "the synchronous mixed oracle, asserting the "
+                         "sampled-ids-only D2H payload")
     ap.add_argument("--mesh", default=None,
                     help="add a TP-sharded mixed leg over a host mesh, "
                          "e.g. 'model=4' or 'data=2,model=4' (needs "
@@ -183,4 +232,5 @@ if __name__ == "__main__":
                          "count=N)")
     args = ap.parse_args()
     run(arch=args.arch, smoke=args.smoke,
-        mesh=parse_mesh(args.mesh) if args.mesh else None)
+        mesh=parse_mesh(args.mesh) if args.mesh else None,
+        async_leg=args.async_leg)

@@ -58,7 +58,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def stage_row(metrics) -> str:
-    m = metrics.means
-    return (f"queue={m['queue']*1e6:.0f}us prefill={m['prefill']*1e6:.0f}us "
-            f"decode={m['decode']*1e6:.0f}us ttft={m['ttft']*1e6:.0f}us "
-            f"hit={m['cache_hit_frac']:.2f}")
+    """Render stage means; an EMPTY aggregate (a pipeline stage that saw
+    no requests) yields NaNs from ``MetricsAggregate.row`` and renders
+    every field as ``-`` instead of raising KeyError."""
+    m = metrics.row(("queue", "prefill", "decode", "ttft",
+                     "cache_hit_frac"))
+
+    def us(v):
+        return "-" if v != v else f"{v * 1e6:.0f}us"
+
+    hit = "-" if m["cache_hit_frac"] != m["cache_hit_frac"] \
+        else f"{m['cache_hit_frac']:.2f}"
+    return (f"queue={us(m['queue'])} prefill={us(m['prefill'])} "
+            f"decode={us(m['decode'])} ttft={us(m['ttft'])} hit={hit}")

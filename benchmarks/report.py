@@ -11,6 +11,15 @@ import sys
 BASE = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+def fmt(v, spec=".2f"):
+    """NaN/None-safe cell formatter: empty pipeline stages aggregate to
+    NaN (``MetricsAggregate.row``) and must render as ``-``, not crash
+    the report."""
+    if v is None or (isinstance(v, float) and v != v):
+        return "-"
+    return format(v, spec)
+
+
 def load(path):
     recs = []
     if os.path.exists(path):
@@ -118,11 +127,15 @@ def sharded_step_table(recs):
           "ratio | assembly (us) | calls/step | recompiles |")
     print("|---|---|---|---|---|---|---|---|")
     for r in recs:
+        ratio = r["step_latency_us"] / r["baseline_us"] \
+            if r.get("baseline_us") and r.get("step_latency_us") \
+            is not None else float("nan")
         print(f"| {r['arch']} | {r['mesh']} | "
-              f"{r['step_latency_us']:.0f} | {r['baseline_us']:.0f} | "
-              f"{r['step_latency_us']/r['baseline_us']:.2f}× | "
-              f"{r['assembly_us_per_step']:.0f} | "
-              f"{r['device_calls_per_step']:.2f} | "
+              f"{fmt(r.get('step_latency_us'), '.0f')} | "
+              f"{fmt(r.get('baseline_us'), '.0f')} | "
+              f"{fmt(ratio)}× | "
+              f"{fmt(r.get('assembly_us_per_step'), '.0f')} | "
+              f"{fmt(r.get('device_calls_per_step'))} | "
               f"{r['recompiles_after_warmup']} |")
 
 

@@ -43,11 +43,15 @@ Per-input layout contract:
   collective;
 * **per-token scheduler metadata** (token ids, positions, adapter
   indices, block tables, write indices, ...) — replicated (``P()``);
-* **logits / boundary-state outputs** — logits replicated (one psum-
-  style all-gather at the unembed, the step's single cross-shard
-  reduction point on the delta path: row-parallel wo/w_down/out_proj
-  psums are the only other collectives, exactly as in training TP);
-  boundary SSM states keep the state-pool layout.
+* **sampled-token outputs + the per-run-slot token buffer** — both
+  replicated (:attr:`StepShardings.tok_buf`): the in-step argmax over
+  the vocab-gathered logits is the single cross-shard reduction point
+  on the delta path (row-parallel wo/w_down/out_proj psums are the only
+  other collectives, exactly as in training TP), and every shard must
+  hold the full token buffer so the next step's ``from_buf`` gathers
+  stay collective-free;
+* **boundary-state outputs** — boundary SSM states keep the state-pool
+  layout.
 
 ``jax.jit`` + GSPMD partitions the step from these input layouts; the
 ``StepShardings`` carried statically in the runner spec pins the output
@@ -314,6 +318,11 @@ class StepShardings:
     # keeps the ragged-attention PV einsum shard-local instead of letting
     # the partitioner rematerialize the gathered V rows
     attn_out: Optional[P] = None
+    # (MR,) per-run-slot last-sampled-token buffer AND the (Rb,) sampled
+    # ids — replicated: the step's argmax all-gathers once at the
+    # unembed, then every shard keeps the full int32 buffer so the next
+    # step's from_buf token gathers need no collective
+    tok_buf: P = P()
     replicated: P = P()
 
     def named(self, spec: P) -> NamedSharding:

@@ -28,6 +28,14 @@ scheduler is adapter-aware — waiting requests trigger async weight
 prefetch, admission pins a device slot (or queues behind eviction), and
 finish/preemption unpin it.  Block hashes salt on the registration uid,
 so slot recycling never aliases the prefix cache.
+
+Each iteration is an explicit **schedule → submit → retire** pipeline
+(see ``Engine.step``): sampling runs on device inside the mixed step,
+so with ``EngineConfig.async_submission`` (the default) step N+1 is
+scheduled, assembled and dispatched BEFORE step N's sampled token ids
+are synced to host — all host-side work hides under device compute, and
+the per-step device→host payload is a handful of int32 ids instead of
+``(R, vocab)`` logits.
 """
 from __future__ import annotations
 
@@ -52,7 +60,25 @@ from repro.serving.adapter_pool import (AdapterPool, AdapterRegistration,
 from repro.serving.metrics import (AdapterPoolStats, MetricsAggregate,
                                    aggregate)
 from repro.serving.request import Request, State
-from repro.serving.runner import MixedBatch, ModelRunner, RunnerConfig
+from repro.serving.runner import (MixedBatch, ModelRunner, RunnerConfig,
+                                  StepHandle)
+
+# placeholder a submitted-but-unretired step leaves in output_tokens:
+# the token's VALUE is still on device (patched at retire); its position
+# already counts for scheduling.  Never a valid vocab id.
+PENDING = -1
+
+
+@dataclass
+class _InflightStep:
+    """A submitted mixed step awaiting retirement: the device handle
+    plus, per request row, the bookkeeping that must wait for the
+    sampled token ids — ``(request, epoch-at-submit, sampled-row index,
+    output_tokens patch index | None, decode block-boundary position |
+    None, eagerly-claimed state-snapshot slot | None)``."""
+    handle: StepHandle
+    retires: List[Tuple[Request, int, int, Optional[int], Optional[int],
+                        Optional[int]]]
 
 
 @dataclass(frozen=True)
@@ -90,6 +116,16 @@ class EngineConfig:
     # the largest construction-time adapter rank (min 8).  Must be set
     # explicitly if later registrations need a higher rank.
     adapter_slot_rank: Optional[int] = None
+    # ---- async step pipeline (schedule → submit → retire) ------------
+    # True (default): one-step-lookahead submission.  Sampling runs on
+    # device inside the mixed step, only the (R,) int32 sampled ids ever
+    # cross to host, and step N's host sync happens AFTER step N+1 has
+    # been scheduled, assembled and dispatched — host work overlaps
+    # device compute.  False retires every step before the next one is
+    # scheduled: the synchronous oracle the async path must match
+    # token for token.  Mixed-mode only; "sequential" execution is
+    # always synchronous.
+    async_submission: bool = True
     # execution-time model: clock advances by measured wall time of each
     # step, scaled by this factor (1.0 = honest CPU timing)
     time_scale: float = 1.0
@@ -182,6 +218,11 @@ class Engine:
                 f"unknown execution_mode {engine_cfg.execution_mode!r}: "
                 "expected 'mixed' or 'sequential'")
         self.use_mixed = engine_cfg.execution_mode == "mixed"
+        self.use_async = self.use_mixed and engine_cfg.async_submission
+        self._inflight: Optional[_InflightStep] = None
+        # steps whose schedule/assembly ran while the previous step was
+        # still executing on device (the overlap the pipeline exists for)
+        self.async_overlap_steps = 0
 
     # ------------------------------------------------------------------
     # adapter lifecycle (delegates to the AdapterPool)
@@ -271,8 +312,11 @@ class Engine:
         ecfg = self.ecfg
         bs = ecfg.block_size
         n_prompt = len(req.prompt)
-        needs_slot = self.runner.Ls > 0
-        if needs_slot and not self._free_slots:
+        # every request pins a run slot: SSM archs keep live state there,
+        # and ALL archs address the runner's per-slot last-sampled-token
+        # buffer through it (async decode rows read the previous token on
+        # device, so the slot is the token's stable identity)
+        if not self._free_slots:
             return False
 
         adapter_pinned = False
@@ -336,8 +380,8 @@ class Engine:
 
         req.n_computed = n_reuse
         req.n_cache_hit_tokens = n_reuse
-        if needs_slot:
-            req.run_slot = self._free_slots.pop()
+        req.run_slot = self._free_slots.pop()
+        if self.runner.Ls > 0:
             if state_slot is not None:
                 self.runner.restore_state(state_slot, req.run_slot)
                 req.state_reused = True
@@ -361,7 +405,31 @@ class Engine:
     # one scheduler step
     # ------------------------------------------------------------------
     def step(self) -> float:
-        """Run one engine iteration; returns the step's execution time."""
+        """Run one engine iteration; returns the step's execution time.
+
+        The iteration is three explicit phases.  With
+        ``async_submission=True`` (default) they form a one-step-
+        lookahead pipeline; with ``False`` every step retires before the
+        next is scheduled — the synchronous oracle::
+
+                      ┌─ schedule ─┐┌─ submit ──┐┌──── retire ─────┐
+            host,     │ decodes,   ││ assemble  ││ sync step N-1's │
+            step N    │ admission, ││ batch,    ││ sampled ids,    │
+                      │ prefills   ││ dispatch  ││ patch tokens,   │
+                      └────────────┘└───────────┘│ hash/register   │
+                                                 │ blocks, finish  │
+                                                 └─────────────────┘
+            device    ──[ step N-1 executing ]───[ step N ]─────────
+
+        Schedule and submit of step N never wait for step N-1's tokens:
+        the mixed step samples on device, decode rows read the previous
+        token straight from the device ``tok_buf`` (``from_buf``), and
+        host bookkeeping that needs the values (``PENDING`` placeholder
+        patching, decode block-boundary hashing, request finishing) is
+        deferred to the retire phase — which runs AFTER step N is
+        already in flight, so the only blocking device→host transfer
+        per iteration is the previous step's (R,) int32 sampled array.
+        """
         # move due arrivals into the waiting queue
         while self.pending and self.pending[0].arrival_time <= self.clock:
             self.waiting.append(self.pending.pop(0))
@@ -382,6 +450,10 @@ class Engine:
             return 0.0
 
         t_before = self.clock
+        prev = self._inflight
+        self._inflight = None
+
+        # ---- schedule ------------------------------------------------
         # decode first: running requests claim their next block BEFORE
         # admission can hand freed blocks to new/preempted requests —
         # this (plus recompute-preemption below) guarantees progress
@@ -414,22 +486,48 @@ class Engine:
                                 - self.ecfg.max_batched_tokens)
         self.last_step_tokens = (n_decode, n_prefill)
 
+        # ---- submit --------------------------------------------------
         if self.use_mixed:
-            self._execute_mixed(decodes, prefills)
+            inflight = self._submit_mixed(decodes, prefills)
+            if inflight is not None and prev is not None:
+                self.async_overlap_steps += 1
+            if not self.use_async and inflight is not None:
+                # synchronous oracle: retire the step we just submitted
+                self._retire(inflight)
+                inflight = None
+            # ---- retire (async: AFTER step N+1 is in flight) --------
+            self._retire(prev)
+            self._inflight = inflight
         else:
             self._execute_decodes(decodes)
             self._execute_prefills(prefills)
-        self._finish_requests()
+            self._finish_requests()
         # block starvation with zero progress: preempt the most recent
         # running request (vLLM recompute-preemption) so the others can
         # allocate; it re-enters the queue and re-prefills via the
-        # prefix cache
-        if n_decode == 0 and n_prefill == 0 and self.running:
+        # prefix cache.  In async mode a just-retired step may have
+        # freed blocks/slots — only preempt once the pipeline is fully
+        # drained (prev is None) and the scheduler STILL found no work,
+        # so preemption never races an in-flight step.
+        if n_decode == 0 and n_prefill == 0 and prev is None \
+                and self.running:
             self._preempt(self.running[-1])
         return self.clock - t_before
 
     # ------------------------------------------------------------------
     def _preempt(self, r: Request) -> None:
+        # step() itself only preempts with the pipeline fully drained
+        # (no unretired step), but _preempt is also callable out of band
+        # (tests, future scheduler policies) while rows of r still ride
+        # an unretired step: bumping the epoch makes the retire phase
+        # drop those rows (their schedule-time bookkeeping is rolled
+        # back right here)
+        r.epoch += 1
+        # drop trailing PENDING placeholders — their producing step will
+        # never patch them (epoch mismatch), and recompute-after-
+        # readmission must only ever replay host-known token values
+        while r.output_tokens and r.output_tokens[-1] == PENDING:
+            r.output_tokens.pop()
         if self.kv_mgr is not None and r.block_ids:
             self.kv_mgr.release_all(r.block_ids)
         r.block_ids = []
@@ -458,20 +556,33 @@ class Engine:
     # executing — both execution paths consume the same schedule
     # ------------------------------------------------------------------
     def _schedule_decodes(self) -> List[Request]:
-        decodes = [r for r in self.running if r.state == State.DECODE]
+        # finished-pending requests (async: final token still riding an
+        # unretired step) never take another decode row; in sync modes
+        # finish always runs before the next schedule, so this filter is
+        # a no-op there
+        decodes = [r for r in self.running
+                   if r.state == State.DECODE and not r.is_finished()]
         bs = self.ecfg.block_size
         # ensure each request has a block for the position it writes
         ok: List[Request] = []
         for r in decodes:
             pos = r.n_computed
             if self.kv_mgr is not None:
+                n_before = len(r.block_ids)
                 while len(r.block_ids) <= pos // bs:
                     try:
                         r.block_ids.append(self.kv_mgr.allocate())
                     except OutOfBlocks:
                         break
                 if len(r.block_ids) <= pos // bs:
-                    continue                        # starved; retry later
+                    # starved: return the partial speculative claim — a
+                    # skipped request must not sit on blocks it cannot
+                    # use this step while admission and the other
+                    # decodes starve behind it (needless recompute-
+                    # preemptions otherwise); it retries next step
+                    while len(r.block_ids) > n_before:
+                        self.kv_mgr.release(r.block_ids.pop())
+                    continue
             ok.append(r)
         return ok
 
@@ -500,27 +611,105 @@ class Engine:
         return spans
 
     # ------------------------------------------------------------------
-    # post-execution bookkeeping shared by both execution paths
+    # post-execution bookkeeping shared by both execution paths, split
+    # into the token-value-free half (``_advance_*`` — runs at submit
+    # time, BEFORE the step's sampled ids exist on host) and the
+    # deferred half that patches values / hashes generated blocks once
+    # the retire phase has synced them
     # ------------------------------------------------------------------
-    def _postprocess_decode(self, r: Request, tok: int) -> None:
+    def _advance_decode(self, r: Request
+                        ) -> Tuple[Optional[int], Optional[int],
+                                   Optional[int]]:
+        """Advance ``r`` past one decode token whose value may still be
+        on device.  Returns ``(patch_idx, boundary_pos, snap_slot)`` for
+        the retire phase: the output_tokens index holding a PENDING
+        placeholder (frontier rows only), the position that completed a
+        block (hash + register deferred until its tokens are host-known)
+        and the state-snapshot slot claimed for it — snapshotting the
+        live SSM state must happen NOW, while the pools still hold this
+        step's output (the next submit advances them)."""
         r.n_computed += 1
-        self._on_block_boundary(r)
-        # append only when at the sampling frontier (after a
-        # preemption the decode path RECOMPUTES known tokens first)
-        if r.n_computed == len(r.all_tokens) and not r.is_finished():
-            r.output_tokens.append(tok)
+        bs = self.ecfg.block_size
+        pos = r.n_computed
+        boundary_pos = snap_slot = None
+        if self.cache is not None and pos % bs == 0:
+            boundary_pos = pos
+            if self.st_mgr is not None:
+                b = pos // bs - 1
+                # when every token of block b is already host-known (the
+                # sync paths always; async only for replayed boundaries
+                # — recompute after preemption), the hash is computable
+                # NOW: skip the slot claim + device copies for a state
+                # the cache already holds, exactly like the pre-split
+                # lookup-first path.  Otherwise (async frontier: the fed
+                # token may still be PENDING) snapshot speculatively and
+                # let the retire phase register or drop it.
+                toks = r.all_tokens
+                known = all(t != PENDING
+                            for t in toks[len(r.hashes) * bs:pos])
+                cached = False
+                if known and not self.use_async:
+                    # sync only: retire follows immediately, so a lookup
+                    # hit here is exactly the pre-split lookup-first
+                    # behavior.  Async must NOT take the shortcut — the
+                    # cached entry could be evicted before this step
+                    # retires, and by then the live pools have advanced
+                    # past the state, so the speculative snapshot is the
+                    # only way to re-register it.
+                    self._extend_hash_chain(r, b)
+                    cached = self.st_mgr.lookup(r.hashes[b]) is not None
+                if not cached:
+                    try:
+                        snap_slot = self.st_mgr.allocate()
+                    except OutOfBlocks:
+                        snap_slot = None  # pool pressure: skip snapshot
+                    else:
+                        self.runner.snapshot_live(max(r.run_slot, 0),
+                                                  snap_slot)
+        patch_idx = None
+        # extend only at the sampling frontier (after a preemption the
+        # decode path RECOMPUTES known tokens first)
+        if pos == len(r.all_tokens) and not r.is_finished():
+            patch_idx = len(r.output_tokens)
+            r.output_tokens.append(PENDING)
+        return patch_idx, boundary_pos, snap_slot
 
-    def _postprocess_prefill(self, r: Request, lo: int, hi: int,
-                             logits_row: np.ndarray, boundary) -> None:
+    def _advance_prefill(self, r: Request, lo: int, hi: int,
+                         boundary) -> Optional[int]:
+        """Token-value-free half of prefill postprocessing: block/state
+        registration only needs the PROMPT hashes (known at admission),
+        so it runs at submit time.  Returns the output_tokens index of
+        the first-token PENDING placeholder, or None."""
         r.n_computed = hi
         # register every block completed by this chunk (+ snapshots)
         self._register_prefill_blocks(r, lo, hi, boundary)
+        patch_idx = None
         if hi == len(r.prompt):                     # prefill complete
             r.state = State.DECODE
-            if r.t_decode_start is None:
-                r.t_decode_start = self.clock
+            # t_decode_start is stamped when the first token's VALUE
+            # arrives (retire / sync postprocess), not here at submit —
+            # TTFT must include the prefill step's device time
             if not r.output_tokens:                 # not a re-prefill
-                r.output_tokens.append(int(np.argmax(logits_row)))
+                patch_idx = 0
+                r.output_tokens.append(PENDING)
+        return patch_idx
+
+    def _postprocess_decode(self, r: Request, tok: int) -> None:
+        """Synchronous decode postprocessing (sequential oracle path):
+        advance + retire back to back with the host-known token."""
+        patch_idx, boundary_pos, snap_slot = self._advance_decode(r)
+        if patch_idx is not None:
+            r.output_tokens[patch_idx] = tok
+        if boundary_pos is not None:
+            self._register_decode_block(r, boundary_pos, snap_slot)
+
+    def _postprocess_prefill(self, r: Request, lo: int, hi: int,
+                             logits_row: np.ndarray, boundary) -> None:
+        patch_idx = self._advance_prefill(r, lo, hi, boundary)
+        if r.state == State.DECODE and r.t_decode_start is None:
+            r.t_decode_start = self.clock
+        if patch_idx is not None:
+            r.output_tokens[patch_idx] = int(np.argmax(logits_row))
 
     def _adapter_idx(self, r: Request, positions: np.ndarray) -> np.ndarray:
         return adapter_index_for_positions(
@@ -577,12 +766,16 @@ class Engine:
     # of the step packed into one ragged batch → one jitted device call.
     # Serves every architecture family: attention-only, SSM/hybrid
     # (ragged SSD scan over the packed axis) and encoder-decoder
-    # (per-row cross-attention KV indexed by req_rows).
+    # (per-row cross-attention KV indexed by req_rows).  ``_submit_mixed``
+    # only DISPATCHES the call and applies the token-value-free
+    # bookkeeping; ``_retire`` later syncs the step's sampled ids and
+    # applies everything that needed them.
     # ------------------------------------------------------------------
-    def _execute_mixed(self, decodes: List[Request],
-                       prefills: List[Tuple[Request, int, int]]) -> None:
+    def _submit_mixed(self, decodes: List[Request],
+                      prefills: List[Tuple[Request, int, int]]
+                      ) -> Optional[_InflightStep]:
         if not decodes and not prefills:
-            return
+            return None
         t_host = time.perf_counter()
         bs = self.ecfg.block_size
         reqs = decodes + [r for r, _, _ in prefills]
@@ -596,6 +789,7 @@ class Engine:
         embeds = take("e_emb", T, np.float32,
                       trailing=(self.cfg.d_model,))
         use_embeds = take("e_use", T, bool)
+        from_buf = take("e_fb", T, bool)
         positions = take("e_pos", T, np.int32)
         adapter_idx = take("e_ad", T, np.int32)
         req_rows = take("e_rows", T, np.int32)
@@ -613,7 +807,11 @@ class Engine:
         t = 0
         for i, r in enumerate(decodes):
             pos = r.n_computed
-            tok_ids[t] = r.all_tokens[pos]
+            tok = r.all_tokens[pos]
+            # PENDING: the token is last step's sample, not yet on host —
+            # the device reads it from tok_buf at this request's run slot
+            from_buf[t] = tok == PENDING
+            tok_ids[t] = max(tok, 0)
             positions[t] = pos
             adapter_idx[t] = self._adapter_idx(r, np.array([pos]))[0]
             req_rows[t] = i
@@ -660,7 +858,8 @@ class Engine:
                          if r.adapter_slot > 0})
 
         mb = MixedBatch(tok_ids=tok_ids, embeds=embeds,
-                        use_embeds=use_embeds, positions=positions,
+                        use_embeds=use_embeds, from_buf=from_buf,
+                        positions=positions,
                         adapter_idx=adapter_idx, req_rows=req_rows,
                         row_cols=row_cols, write_bids=write_bids,
                         write_offs=write_offs, block_tables=block_tables,
@@ -670,20 +869,55 @@ class Engine:
                         active_slots=np.asarray(active, np.int32))
         self.t_assembly += time.perf_counter() - t_host
         t0 = time.perf_counter()
-        logits, boundary = self.runner.execute_batch(mb)  # one jitted call
+        handle = self.runner.submit_batch(mb)   # one jitted call, no sync
         self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
-        # decode bookkeeping first, then prefill — the same order the
-        # sequential path registers blocks in
+        # eager (token-value-free) bookkeeping; the retire list records
+        # what must wait for the sampled ids.  Decode rows first, then
+        # prefill — the same order the sequential path registers blocks
+        retires: List[Tuple] = []
         for i, r in enumerate(decodes):
-            self._postprocess_decode(r, int(np.argmax(logits[i])))
+            patch_idx, bpos, slot = self._advance_decode(r)
+            retires.append((r, r.epoch, i, patch_idx, bpos, slot))
         for j, (r, lo, hi) in enumerate(prefills):
             bnd = None
-            if boundary is not None:
+            if handle.boundary is not None:
                 off, cnt = span_snaps[j]
-                bnd = (boundary[0][:, off:off + cnt],
-                       boundary[1][:, off:off + cnt])
-            self._postprocess_prefill(r, lo, hi, logits[len(decodes) + j],
-                                      bnd)
+                bnd = (handle.boundary[0][:, off:off + cnt],
+                       handle.boundary[1][:, off:off + cnt])
+            patch_idx = self._advance_prefill(r, lo, hi, bnd)
+            retires.append((r, r.epoch, len(decodes) + j, patch_idx,
+                            None, None))
+        return _InflightStep(handle=handle, retires=retires)
+
+    # ------------------------------------------------------------------
+    def _retire(self, inf: Optional[_InflightStep]) -> None:
+        """Retire a submitted step: the one blocking device→host sync
+        per iteration (the (R,) int32 sampled ids), then the deferred
+        bookkeeping — patch PENDING tokens, hash + register decode-
+        completed blocks, finish requests.  Rows whose request was
+        preempted after submit (epoch mismatch) are dropped; only their
+        state-snapshot claim needs returning."""
+        if inf is None:
+            return
+        t0 = time.perf_counter()
+        sampled = self.runner.fetch_sampled(inf.handle)
+        self.clock += (time.perf_counter() - t0) * self.ecfg.time_scale
+        for r, epoch, row, patch_idx, bpos, slot in inf.retires:
+            if r.epoch != epoch:
+                if slot is not None:
+                    self.st_mgr.release(slot)
+                continue
+            # first-token arrival defines decode start: the clock above
+            # just absorbed this step's device time, so TTFT/prefill
+            # keep including the prefill step's execution (stamping at
+            # submit would shift it into the decode stage)
+            if r.state == State.DECODE and r.t_decode_start is None:
+                r.t_decode_start = self.clock
+            if patch_idx is not None:
+                r.output_tokens[patch_idx] = int(sampled[row])
+            if bpos is not None:
+                self._register_decode_block(r, bpos, slot)
+        self._finish_requests()
 
     # ------------------------------------------------------------------
     def _adopt_canonical(self, r: Request, b: int, h) -> None:
@@ -723,44 +957,51 @@ class Engine:
                     self.st_mgr.release(slot)       # cached, not owned
 
     # ------------------------------------------------------------------
-    def _on_block_boundary(self, r: Request) -> None:
-        """After computing token at position n_computed-1 during decode:
-        if it completed a block, hash + register it (generated tokens are
-        cached too — paper §4.4)."""
-        if self.cache is None:
-            return
+    def _extend_hash_chain(self, r: Request, b: int) -> None:
+        """Extend the block-hash chain INCREMENTALLY from the last
+        cached parent through block ``b`` (one hash_block per new block;
+        recomputing the whole chain from token 0 made long decodes O(n²)
+        in hashing work).  Idempotent; every token through block ``b``
+        must be host-known."""
         bs = self.ecfg.block_size
-        pos = r.n_computed
-        if pos % bs != 0:
-            return
-        b = pos // bs - 1
         toks = r.all_tokens
-        # extend the hash chain INCREMENTALLY from the last cached parent
-        # (one hash_block per new block; recomputing the whole chain from
-        # token 0 made long decodes O(n²) in hashing work)
         while len(r.hashes) <= b:
             i = len(r.hashes)
             lo, hi = i * bs, (i + 1) * bs
             parent = r.hashes[-1] if r.hashes else None
             extra = r.salt + block_extra(r.adapter_key(), lo, hi)
             r.hashes.append(hash_block(parent, toks[lo:hi], extra))
+
+    # ------------------------------------------------------------------
+    def _register_decode_block(self, r: Request, pos: int,
+                               snap_slot: Optional[int]) -> None:
+        """A decode step that reached ``pos`` completed a block: hash +
+        register it (generated tokens are cached too — paper §4.4).
+        Runs at RETIRE time — the block's token values must be host-
+        known; ``snap_slot`` holds the live-state snapshot
+        ``_advance_decode`` took while the pools still held that step's
+        output."""
+        b = pos // self.ecfg.block_size - 1
+        self._extend_hash_chain(r, b)
         h = r.hashes[b]
         if self.kv_mgr is not None and b < len(r.block_ids):
             self._adopt_canonical(r, b, h)
-        if self.st_mgr is not None and self.st_mgr.lookup(h) is None:
-            try:
-                slot = self.st_mgr.allocate()
-            except OutOfBlocks:
-                return
-            self.runner.snapshot_live(max(r.run_slot, 0), slot)
-            self.cache.register_state(h, slot)
-            self.st_mgr.release(slot)
+        if snap_slot is not None:
+            if self.st_mgr.lookup(h) is None:
+                self.cache.register_state(h, snap_slot)
+            self.st_mgr.release(snap_slot)
 
     # ------------------------------------------------------------------
     def _finish_requests(self) -> None:
         still = []
         for r in self.running:
-            if r.state == State.DECODE and r.is_finished():
+            # a request only finishes once its final token VALUE is on
+            # host (async: the last output may still be a PENDING
+            # placeholder riding the just-submitted step — it finishes
+            # at that step's retire, right after the patch)
+            if r.state == State.DECODE and r.is_finished() \
+                    and (not r.output_tokens
+                         or r.output_tokens[-1] != PENDING):
                 r.state = State.DONE
                 r.t_done = self.clock
                 if self.kv_mgr is not None:

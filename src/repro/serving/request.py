@@ -54,6 +54,11 @@ class Request:
     output_tokens: List[int] = field(default_factory=list)
     # cache bookkeeping --------------------------------------------------------
     inv_start: int = 0                      # activation point (aLoRA)
+    # bumped on every preemption: rows of this request riding a
+    # submitted-but-unretired async step carry the epoch they were
+    # scheduled under, and the retire phase drops rows whose epoch no
+    # longer matches (their bookkeeping was rolled back by the preempt)
+    epoch: int = 0
     block_ids: List[int] = field(default_factory=list)
     hashes: List[BlockHash] = field(default_factory=list)  # full-block chain
     n_computed: int = 0                     # prompt tokens with KV in cache
@@ -97,6 +102,10 @@ class Request:
             "itl": decode / max(n_out - 1, 1),
             "e2e": queue + prefill + decode,
             "inference": prefill + decode,
+            # absolute endpoints for makespan-based throughput (metrics
+            # aggregation must not double-count overlapped wall-clock)
+            "arrival": self.arrival_time,
+            "done": self.t_done,
             "prompt_len": len(self.prompt),
             "output_len": len(self.output_tokens),
             "cache_hit_tokens": self.n_cache_hit_tokens,

@@ -4,11 +4,14 @@ against the paged KV pool / SSM state pools.
 This is the engine-side analogue of vLLM's GPU model runner (paper §3 +
 App. A/B): before each forward it assembles the aLoRA metadata (per-token
 adapter indices — the activation-aware mask) and block tables, then runs
-a jitted step.  The primary path is ``execute_batch`` — ONE jitted ragged
-step per engine iteration covering every architecture family (attention,
-SSM/hybrid via a ragged SSD scan, encoder-decoder via per-row cross-
-attention KV); the v0-style ``prefill_chunk``/``decode_batch`` pair is
-kept for the explicit sequential mode.  Host-side assembly reuses
+a jitted step.  The primary path is ``submit_batch`` + ``fetch_sampled``
+— ONE jitted ragged step per engine iteration covering every
+architecture family (attention, SSM/hybrid via a ragged SSD scan,
+encoder-decoder via per-row cross-attention KV), dispatched without
+blocking so the engine can retire it a step later (``execute_batch`` is
+the submit-then-fetch sync wrapper); the v0-style
+``prefill_chunk``/``decode_batch`` pair is kept for the explicit
+sequential mode.  Host-side assembly reuses
 persistent capacity-doubling buffers (``HostBufferPool``) instead of
 reallocating per step.  The numerical sublayers are shared with the
 distributed step functions (``repro.models``); shapes are bucketed
@@ -26,12 +29,26 @@ metadata replicated (``distributed.sharding`` §Sharded serving).  The
 static ``StepShardings`` in the spec pins output layouts so pools never
 reshard between steps; the host-side assembly below is untouched.
 
+Sampling happens ON DEVICE: the mixed step ends in an argmax over the
+per-request logits rows and returns only the sampled ``int32`` token ids
+— the full ``(R, vocab)`` logits never cross to host.  A device-resident
+``tok_buf`` keeps each run slot's last sampled token so the NEXT step's
+decode rows can reference it (``MixedBatch.from_buf``) before the host
+has ever seen the value — the mechanism behind the engine's one-step-
+lookahead async submission (``EngineConfig.async_submission``).
+``submit_batch`` dispatches without blocking and returns a
+:class:`StepHandle`; ``fetch_sampled`` is the step's ONLY device→host
+transfer (logged in ``d2h_fetches`` so benchmarks can assert the payload
+stays sampled-ids-sized).
+
 Pools:
   k_pool/v_pool:     (La, NB, bs, KV, hd)   — last block id is a write
                                               dump for padded slots
   live_ssm/conv:     (Ls, MR, ...)          — per running-slot SSM state
   snap_ssm/conv:     (Ls, NS, ...)          — block-boundary snapshots
                                               (cross-model state reuse)
+  tok_buf:           (MR,) int32            — last sampled token per run
+                                              slot (async decode feed)
 """
 from __future__ import annotations
 
@@ -107,6 +124,10 @@ class MixedBatch:
 
     Per-token arrays (T,):
       tok_ids     — token id (embedded in-step; ignored where use_embeds)
+      from_buf    — row's token id is NOT host-known: the step reads it
+                    from the device-resident ``tok_buf`` at the row's run
+                    slot instead (the previous step's sampled token —
+                    async one-step-lookahead decode rows)
       use_embeds  — row comes from ``embeds`` instead (prefill rows,
                     incl. multimodal prefix embeds)
       positions   — absolute position in the request
@@ -146,6 +167,23 @@ class MixedBatch:
     # ascending adapter-slot ids this step's tokens reference (grouped-
     # LoRA active set); padded with 0 (zero adapter) to a pow2 bucket
     active_slots: Optional[np.ndarray] = None
+    # (T,) bool: token id comes from the device tok_buf, not tok_ids
+    # (None -> all host-known, the sync-oracle assembly)
+    from_buf: Optional[np.ndarray] = None
+
+
+@dataclass
+class StepHandle:
+    """An in-flight mixed step: device futures only, nothing synced.
+
+    ``sampled`` is the step's (Rb,) int32 on-device sampled-token array
+    (argmax row per request, bucket-padded); ``boundary`` the SSM
+    block-boundary state pair (or ``None``); ``n_requests`` the real row
+    count.  ``ModelRunner.fetch_sampled`` performs the one blocking
+    device→host transfer that retires the handle."""
+    sampled: jax.Array
+    boundary: Optional[Tuple]
+    n_requests: int
 
 
 def _chunk_attention(q, past_k, past_v, past_len, new_k, new_v,
@@ -295,8 +333,8 @@ def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
 
 @partial(jax.jit, static_argnums=0)
 def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
-                live_ssm, live_conv, tok_ids, embeds, use_embeds,
-                positions, q_lens, adapter_idx, active_slots,
+                live_ssm, live_conv, tok_buf, tok_ids, embeds, use_embeds,
+                from_buf, positions, q_lens, adapter_idx, active_slots,
                 block_tables, req_rows, row_cols, write_bids, write_offs,
                 out_rows, run_slots, tok_slots, snap_rows, xkv):
     """One jitted step over the whole mixed batch — every architecture
@@ -313,8 +351,17 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
       emitted at ``snap_rows`` for the prefix cache;
     * encoder-decoder: every token cross-attends over its OWN request's
       projected encoder K/V, gathered per token by ``req_rows``.
+
+    Sampling is part of the step: the per-request logits rows reduce to
+    an argmax ON DEVICE, the sampled ids land in ``tok_buf`` at each
+    request's run slot (next step's decode rows read them back through
+    ``from_buf`` without a host round-trip), and only the (Rb,) int32
+    ``sampled`` array is ever fetched by the host.
     """
     cfg, rt = spec.cfg, spec.rt
+    # decode rows submitted before their token reached the host read the
+    # previous step's sampled token straight from the device buffer
+    tok_ids = jnp.where(from_buf, tok_buf[tok_slots], tok_ids)
     tok_emb = params["embed"]["tok"][tok_ids]
     x = jnp.where(use_embeds[:, None], embeds.astype(tok_emb.dtype),
                   tok_emb)[None]                             # (1, Tb, d)
@@ -369,13 +416,20 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
             ai += 1
     x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = M.logits_for(params, cfg, x[0][out_rows])       # (Rb, V)
+    # on-device sampling: argmax per request row; the sampled ids are the
+    # step's only host-visible output AND feed the next step's decode
+    # rows through the per-run-slot token buffer.  Padded request rows
+    # all target the reserved dump slot.
+    sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tok_buf = tok_buf.at[run_slots].set(sampled)
     b_ssm = jnp.stack(boundary_ssm) if boundary_ssm else 0
     b_conv = jnp.stack(boundary_conv) if boundary_conv else 0
     if spec.shard is not None:
         # pin the output layouts so the pools round-trip through the step
         # with the exact sharding they were created with (no resharding
-        # between steps, no post-warmup recompiles); logits gather
-        # replicated — the step's single host-visible output
+        # between steps, no post-warmup recompiles); sampled ids and the
+        # token buffer gather replicated — sampling is the step's single
+        # cross-shard reduction beyond the row-parallel psums
         sh = spec.shard
         k_pool = sh.constrain(k_pool, sh.kv_pool)
         v_pool = sh.constrain(v_pool, sh.kv_pool)
@@ -384,8 +438,10 @@ def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
         if boundary_ssm:
             b_ssm = sh.constrain(b_ssm, sh.ssm_pool)
             b_conv = sh.constrain(b_conv, sh.conv_pool)
-        logits = sh.constrain(logits, sh.replicated)
-    return (k_pool, v_pool, live_ssm, live_conv, b_ssm, b_conv, logits)
+        tok_buf = sh.constrain(tok_buf, sh.tok_buf)
+        sampled = sh.constrain(sampled, sh.tok_buf)
+    return (k_pool, v_pool, live_ssm, live_conv, tok_buf, b_ssm, b_conv,
+            sampled)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -429,11 +485,27 @@ class HostBufferPool:
     Set ``REPRO_HOST_BUF_REUSE=0`` to allocate fresh arrays per call —
     the pre-pool behavior, kept for A/B assembly-time measurements
     (``benchmarks/bench_mixed_batch.py`` reports assembly_us_per_step).
+
+    The pool is DOUBLE-BUFFERED across submissions (``flip``): jax's CPU
+    backend zero-copies suitably-aligned numpy arrays into device
+    buffers, so a staging buffer may be aliased by a dispatched-but-
+    unfinished step — refilling it for the next step would corrupt the
+    in-flight computation.  With one-step-lookahead submission at most
+    ONE step is ever in flight, so alternating between two buffer sets
+    (one flip per submitted step) guarantees a submission never rewrites
+    memory the previous step still reads.  A deeper pipeline would need
+    ``depth + 1`` generations.
     """
 
     def __init__(self):
         self._bufs: dict = {}
+        self._gen = 0
         self._reuse = os.environ.get("REPRO_HOST_BUF_REUSE", "1") != "0"
+
+    def flip(self) -> None:
+        """Advance to the other buffer generation — call once per
+        submitted step, BEFORE taking that step's staging buffers."""
+        self._gen ^= 1
 
     def take(self, name: str, n: int, dtype, *, trailing: Tuple[int, ...] = (),
              fill=0) -> np.ndarray:
@@ -443,7 +515,7 @@ class HostBufferPool:
         # oscillates between steps (block tables by nbb, xk/xv by Rb —
         # already pow2-bucketed) each keep their own pooled buffer
         # instead of thrashing a single slot
-        key = (name, trailing, np.dtype(dtype).str)
+        key = (name, trailing, np.dtype(dtype).str, self._gen)
         buf = self._bufs.get(key)
         if buf is None or buf.shape[0] < n:
             cap = next_pow2(max(n, 1))
@@ -523,6 +595,10 @@ class ModelRunner:
         # runner-side host prep time (bucket padding + xkv stacking);
         # the engine adds its packing time — the benchmark reports the sum
         self.t_assembly = 0.0
+        # (elements, dtype) of every blocking device→host fetch on the
+        # mixed path — benchmarks assert the per-step D2H payload is the
+        # sampled int32 ids, never the (R, vocab) logits
+        self.d2h_fetches: List[Tuple[int, str]] = []
 
         # per-layer adapter stacks aligned with layer order (the shared
         # AdapterPool list, or inert Nones for adapter-free engines)
@@ -563,6 +639,12 @@ class ModelRunner:
         else:
             self.live_ssm = self.live_conv = None
             self.snap_ssm = self.snap_conv = None
+        # last sampled token per run slot (every arch family): lets the
+        # next step's decode rows reference a token the host has not yet
+        # fetched (async one-step lookahead)
+        self.tok_buf = self._pool(
+            jnp.zeros((rcfg.max_running,), jnp.int32),
+            None if self._shard is None else self._shard.tok_buf)
 
     # ------------------------------------------------------------------
     # sharded-execution helpers
@@ -614,17 +696,24 @@ class ModelRunner:
     # ------------------------------------------------------------------
     # unified mixed-batch step (decode tokens + prefill chunks, one call)
     # ------------------------------------------------------------------
-    def execute_batch(self, mb: MixedBatch):
-        """Execute one mixed ragged batch in a single jitted device call.
+    def submit_batch(self, mb: MixedBatch) -> StepHandle:
+        """Dispatch one mixed ragged batch as a single jitted device call
+        WITHOUT blocking on its result.
 
-        Returns (logits, boundary): logits (R, V) — one row per request,
-        taken at that request's last packed token; boundary — ``None``
+        Returns a :class:`StepHandle` whose ``sampled`` array holds the
+        on-device argmax-sampled token id per request row (taken at that
+        request's last packed token) and whose ``boundary`` is ``None``
         for attention-only archs, else a ``(b_ssm (Ls, Cb, nh, N, P),
         b_conv (Ls, Cb, W-1, ch))`` pair of post-token SSM states at the
         batch's ``snap_rows`` (prefill block boundaries), in snap-row
-        order, for prefix-cache state registration.
+        order, for prefix-cache state registration.  The caller retires
+        the handle with :meth:`fetch_sampled` — in async mode only after
+        the NEXT step has been submitted.
         """
         t_host = time.perf_counter()
+        # new staging generation: never rewrite buffers the (at most
+        # one) still-executing previous step may alias zero-copy
+        self.host_bufs.flip()
         rc = self.rcfg
         T = len(mb.tok_ids)
         R = len(mb.block_tables)
@@ -671,6 +760,9 @@ class ModelRunner:
         # per-token run slot for the ragged SSD state/conv gathers
         tok_slots = take("tok_slots", Tb, np.int32, fill=dump_slot)
         tok_slots[:T] = run_slots[rows[:T]]
+        fb = take("fb", Tb, bool)
+        if mb.from_buf is not None:
+            fb[:T] = mb.from_buf
         snap = take("snap", Cb, np.int32)
         snap[:C] = mb.snap_rows
         # active adapter slots, pow2-bucketed; padding entries are slot 0
@@ -685,18 +777,39 @@ class ModelRunner:
         self.t_assembly += time.perf_counter() - t_host
 
         self.call_counts["mixed_step"] += 1
-        meta = self._dev((tok, emb, use, pos, qln, ad, act, bt, rows,
+        meta = self._dev((tok, emb, use, fb, pos, qln, ad, act, bt, rows,
                           cols, wb, wo, out_rows, run_slots, tok_slots,
                           snap))
-        (self.k_pool, self.v_pool, live_ssm, live_conv, b_ssm, b_conv,
-         logits) = _mixed_impl(
+        (self.k_pool, self.v_pool, live_ssm, live_conv, self.tok_buf,
+         b_ssm, b_conv, sampled) = _mixed_impl(
             self._spec, self.params, self.adapter_layers, self.k_pool,
-            self.v_pool, self.live_ssm, self.live_conv, *meta, xkv)
+            self.v_pool, self.live_ssm, self.live_conv, self.tok_buf,
+            *meta, xkv)
         boundary = None
         if self.Ls:
             self.live_ssm, self.live_conv = live_ssm, live_conv
             boundary = (b_ssm, b_conv)
-        return np.asarray(logits[:R]), boundary
+        return StepHandle(sampled=sampled, boundary=boundary,
+                          n_requests=R)
+
+    def fetch_sampled(self, handle: StepHandle) -> np.ndarray:
+        """Block until ``handle``'s step finished and return its sampled
+        token ids, (R,) int32 — the mixed path's ONLY device→host
+        transfer (a few bytes per request, never the full logits)."""
+        # bounded diagnostic log (benchmarks/tests assert payload shape/
+        # dtype over it): trim in bulk so a long-lived engine never
+        # accumulates one entry per step forever
+        if len(self.d2h_fetches) >= 4096:
+            del self.d2h_fetches[:2048]
+        self.d2h_fetches.append((int(handle.sampled.size),
+                                 str(np.dtype(handle.sampled.dtype))))
+        return np.asarray(handle.sampled)[:handle.n_requests]
+
+    def execute_batch(self, mb: MixedBatch):
+        """Synchronous submit+fetch convenience wrapper: returns
+        (sampled (R,) int32, boundary)."""
+        handle = self.submit_batch(mb)
+        return self.fetch_sampled(handle), handle.boundary
 
     def _stack_xkv(self, xkv_list, Rb: int, dtype):
         """Stack per-request encoder K/V into an (La, Rb, Se, KV, hd)
@@ -710,10 +823,14 @@ class ModelRunner:
             return self._xkv_stack[1]
         Se = xkv_list[0][1][0].shape[1]
         KV, hd = self.cfg.num_kv_heads, self.cfg.head_dim
-        xk = self.host_bufs.take("xk", self.La, dtype,
-                                 trailing=(Rb, Se, KV, hd))
-        xv = self.host_bufs.take("xv", self.La, dtype,
-                                 trailing=(Rb, Se, KV, hd))
+        # FRESH arrays on every membership miss, never pooled: the
+        # stacked device arrays are cached across steps, so they can
+        # outlive both HostBufferPool generations — a pooled buffer
+        # could be rewritten while an in-flight step still (zero-copy)
+        # reads the cached stack.  Misses are rare (membership changes),
+        # steady-state decode hits the cache and allocates nothing.
+        xk = np.zeros((self.La, Rb, Se, KV, hd), dtype)
+        xv = np.zeros_like(xk)
         for i, (_, (k_, v_)) in enumerate(xkv_list):
             xk[:, i] = np.asarray(k_)
             xv[:, i] = np.asarray(v_)

@@ -178,9 +178,9 @@ def test_budget_cap_not_violated(setup, mode):
 # ---------------------------------------------------------------------------
 # 4. mixed batch ≡ sequential, in one device call per step
 # ---------------------------------------------------------------------------
-def _run(setup, mode, *, num_blocks=512, staggered=False):
+def _run(setup, mode, *, num_blocks=512, staggered=False, **ecfg_kw):
     eng = mk_engine(setup, execution_mode=mode, num_blocks=num_blocks,
-                    max_batched_tokens=64)
+                    max_batched_tokens=64, **ecfg_kw)
     specs = [(prompt_of(40, seed=1), None),
              (prompt_of(52, seed=2) + list(INV), "uq"),
              (prompt_of(33, seed=3), "lm"),
@@ -487,3 +487,93 @@ def test_budget_and_block_accounting_under_adapter_churn(setup):
     assert eng.adapter_pool.evictions > 0       # both adapters cycled
     assert eng.adapter_pool.pinned_slots() == 0
     assert eng.kv_mgr.num_free() == free0       # no block leaks
+
+
+# ---------------------------------------------------------------------------
+# 8. scheduler starvation must not hold a partial block claim
+# ---------------------------------------------------------------------------
+def test_schedule_decodes_releases_partial_claim_on_starvation(setup,
+                                                               monkeypatch):
+    """A decode that cannot claim EVERY block it needs this step must
+    release the ones it did claim: holding blocks it cannot use while
+    admission and the other decodes starve forces needless
+    recompute-preemptions.  Forced here with a two-block gap and an
+    allocator that has exactly one block left."""
+    eng = mk_engine(setup, async_submission=False)
+    rid = eng.submit(prompt_of(47, seed=1), 40)
+    for _ in range(4):                         # prefill + a few decodes
+        eng.step()
+    r = eng.request(rid)
+    assert r.state.value == "decode" and not r.is_finished()
+    # synthesize a speculative two-block gap (the shape a starved-then-
+    # retried request builds up), then leave exactly ONE free block
+    eng.kv_mgr.release(r.block_ids.pop())
+    eng.kv_mgr.release(r.block_ids.pop())
+    r.n_computed = len(r.block_ids) * eng.ecfg.block_size \
+        + eng.ecfg.block_size + 1              # needs 2 more blocks
+    held = [eng.kv_mgr.allocate()
+            for _ in range(eng.kv_mgr.num_free() - 1)]
+    free_before = eng.kv_mgr.num_free()
+    assert free_before == 1
+    n_blocks_before = len(r.block_ids)
+    ok = eng._schedule_decodes()
+    assert r not in ok                         # starved, skipped
+    # the partial claim (1 of the 2 needed blocks) was released …
+    assert eng.kv_mgr.num_free() == free_before
+    # … and the request's table no longer references it
+    assert len(r.block_ids) == n_blocks_before
+    eng.kv_mgr.release_all(held)
+
+
+# ---------------------------------------------------------------------------
+# 9. async step pipeline (EngineConfig.async_submission)
+# ---------------------------------------------------------------------------
+def test_async_equals_sync_mixed(setup):
+    """One-step-lookahead submission ≡ the synchronous mixed oracle,
+    token for token, and still ≡ the sequential path."""
+    eng_a, out_a = _run(setup, "mixed")                 # async default
+    eng_s, out_s = _run(setup, "mixed", async_submission=False)
+    eng_q, out_q = _run(setup, "sequential")
+    assert eng_a.use_async and not eng_s.use_async and not eng_q.use_async
+    assert out_a == out_s == out_q
+    assert all(len(o) == 6 for o in out_a)
+
+
+def test_async_placeholder_patched_and_finish_deferred(setup):
+    """A submitted-but-unretired step leaves PENDING placeholders in
+    output_tokens (position counts for scheduling, value still on
+    device); the next step's retire patches them, and no placeholder
+    survives a drain."""
+    from repro.serving.engine import PENDING
+    eng = mk_engine(setup)
+    rid = eng.submit(prompt_of(20, seed=1), 3)
+    eng.step()                 # prefill submitted, first token in flight
+    req = eng.request(rid)
+    assert req.output_tokens == [PENDING]
+    eng.step()                 # decode submitted, prefill retired
+    assert req.output_tokens[0] != PENDING
+    assert req.output_tokens[-1] == PENDING
+    eng.run_until_idle()
+    assert PENDING not in req.output_tokens
+    assert len(req.output_tokens) == 3
+    assert req.state.value == "done"
+
+
+def test_async_decode_blocks_still_cached(setup):
+    """Deferred (retire-time) decode block hashing must still register
+    generated blocks — paper §4.4 reuse of generated tokens holds under
+    async submission, and the hash chain matches a from-scratch
+    recompute."""
+    from repro.core.block_hash import request_block_hashes
+    eng = mk_engine(setup)
+    rid = eng.submit(prompt_of(30, seed=1), 40)
+    eng.run_until_idle()
+    req = eng.request(rid)
+    # positions 32/48/64 completed blocks 1/2/3 during decode
+    assert req.hashes == request_block_hashes(
+        req.all_tokens[:64], eng.ecfg.block_size, req.adapter_key(),
+        req.salt)
+    # a follow-up over the generated context hits those blocks
+    r2 = eng.submit(req.all_tokens[:64] + prompt_of(8, seed=2), 2)
+    eng.run_until_idle()
+    assert eng.request(r2).n_cache_hit_tokens >= 48

@@ -1,0 +1,83 @@
+"""Metrics-aggregation regressions (serving/metrics.py).
+
+1. ``throughput_tok_per_s`` is tokens / MAKESPAN (max done − min
+   arrival).  The old tokens / Σ per-request e2e double-counts
+   overlapped wall-clock under concurrency and underreports throughput;
+   that per-request service rate is preserved as ``tok_per_req_s``.
+2. ``MetricsAggregate.row()`` on an empty aggregate returns NaNs
+   (renderers show ``-``) instead of raising KeyError — a pipeline
+   stage that saw no requests must not crash the benchmark report.
+"""
+import math
+
+from benchmarks.common import stage_row
+from repro.serving.metrics import (METRIC_KEYS, MetricsAggregate,
+                                   aggregate, speedup_table)
+
+
+def fake_metrics(arrival, done, prompt_len=50, output_len=50):
+    e2e = done - arrival
+    base = {k: e2e / 4 for k in METRIC_KEYS}
+    base.update(e2e=e2e, arrival=arrival, done=done,
+                prompt_len=prompt_len, output_len=output_len,
+                cache_hit_frac=0.0)
+    return base
+
+
+def test_throughput_uses_makespan_not_summed_e2e():
+    """Two fully-overlapped requests, each 100 tokens over [0, 10]s: the
+    system served 200 tokens in 10 wall-clock seconds (20 tok/s), not
+    in 20 summed request-seconds (10 tok/s)."""
+    m = aggregate([fake_metrics(0.0, 10.0), fake_metrics(0.0, 10.0)])
+    assert m.throughput_tok_per_s == 200 / 10.0
+    assert m.tok_per_req_s == 200 / 20.0        # the old value, renamed
+
+
+def test_throughput_staggered_arrivals():
+    """Makespan spans first arrival to last completion."""
+    m = aggregate([fake_metrics(0.0, 10.0), fake_metrics(5.0, 20.0)])
+    assert m.throughput_tok_per_s == 200 / 20.0
+    assert m.tok_per_req_s == 200 / 25.0
+
+
+def test_throughput_falls_back_without_endpoints():
+    """Hand-built metric dicts without arrival/done keys keep the
+    per-request rate rather than inventing a wall-clock."""
+    recs = [fake_metrics(0.0, 10.0)]
+    for r in recs:
+        del r["arrival"], r["done"]
+    m = aggregate(recs)
+    assert m.throughput_tok_per_s == m.tok_per_req_s == 100 / 10.0
+
+
+def test_empty_aggregate_row_returns_nans():
+    """aggregate([]) used to return empty dicts that made row() raise
+    KeyError on every METRIC_KEYS lookup; an empty pipeline stage now
+    aggregates to NaNs."""
+    m = aggregate([])
+    assert m.n == 0
+    row = m.row()
+    assert set(row) == set(METRIC_KEYS)
+    assert all(math.isnan(v) for v in row.values())
+
+
+def test_empty_stage_renders_dashes():
+    """The benchmark stage renderer shows '-' for an empty stage instead
+    of crashing the report."""
+    s = stage_row(aggregate([]))
+    assert "queue=-" in s and "hit=-" in s
+    # a non-empty aggregate still renders numbers
+    s2 = stage_row(aggregate([fake_metrics(0.0, 10.0)]))
+    assert "-" not in s2.replace("hit=0.00", "")
+
+
+def test_speedup_table_tolerates_empty_baseline():
+    sp = speedup_table(aggregate([]), aggregate([fake_metrics(0.0, 1.0)]))
+    assert set(sp)                               # keys present, no raise
+
+
+def test_row_default_construction_keeps_field_order():
+    """MetricsAggregate stays positionally constructible for existing
+    callers (tok_per_req_s defaults)."""
+    m = MetricsAggregate(0, {}, {}, {}, 0.0)
+    assert m.tok_per_req_s == 0.0

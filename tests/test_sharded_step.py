@@ -1,27 +1,34 @@
-"""Sharded ≡ unsharded equivalence of the ONE jitted mixed ragged step.
+"""Sharded ≡ unsharded and async ≡ sync equivalence of the ONE jitted
+mixed ragged step.
 
 The TP-sharded serving path (``EngineConfig.mesh``) must be a pure
-layout change: running the same workload on a ``(data=2, model=4)`` host
-mesh has to produce token-for-token identical outputs to the
-single-device default path — across architecture families (attention,
-SSM, encoder-decoder), with dynamic adapter churn, recompute-preemption
-and prefix-cache reuse in the loop — while keeping the mixed path's
-1.0-device-calls-per-step and zero-post-warmup-recompile invariants.
+layout change, and the async step pipeline
+(``EngineConfig.async_submission``, schedule → submit → retire with
+one-step-lookahead submission) must be a pure SCHEDULING-OVERLAP
+change: running the same workload on a ``(data=2, model=4)`` host mesh
+and/or with async submission has to produce token-for-token identical
+outputs to the synchronous single-device oracle — across architecture
+families (attention, SSM, encoder-decoder), with dynamic adapter churn,
+recompute-preemption and prefix-cache reuse in the loop — while keeping
+the mixed path's 1.0-device-calls-per-step and
+zero-post-warmup-recompile invariants.
 
-This module needs 8 host devices; the CI ``sharded`` leg runs it with
+Mesh-bearing tests need 8 host devices (``needs_mesh``); the CI
+``sharded`` and ``async`` legs run them with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported before
-jax initializes.  Under the plain tier-1 invocation (1 device) every
-test skips.
+jax initializes, and they skip under the plain 1-device tier-1
+invocation.  The single-device async ≡ sync oracle tests run
+everywhere.
 """
 import jax
 import numpy as np
 import pytest
 
-if jax.device_count() < 8:
-    pytest.skip(
-        "sharded-step suite needs 8 host devices — run with "
-        "XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI "
-        "'sharded' leg)", allow_module_level=True)
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host devices — run with "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI "
+           "'sharded'/'async' legs)")
 
 from repro.configs import get_reduced
 from repro.core.alora import AdapterSpec, init_adapter_weights
@@ -123,6 +130,7 @@ def run_workload(eng, *, n=5, gen=6, prompt_len=40, seed=5):
 # ---------------------------------------------------------------------------
 # token-for-token equivalence per architecture family
 # ---------------------------------------------------------------------------
+@needs_mesh
 @pytest.mark.parametrize("arch", ARCHS)
 def test_sharded_matches_single_device(zoo, arch):
     """(data=2, model=4) mixed step ≡ single-device mixed step, token for
@@ -146,6 +154,7 @@ def test_sharded_matches_single_device(zoo, arch):
     assert sh_st["mixed_calls"] == sh_st["steps"]
 
 
+@needs_mesh
 def test_preemption_recompute_equivalence(zoo):
     """Block starvation → recompute-preemption fires on BOTH sides at the
     same step and the re-prefill (through the prefix cache) reproduces
@@ -175,6 +184,7 @@ def test_preemption_recompute_equivalence(zoo):
 # ---------------------------------------------------------------------------
 # compile-cache discipline under sharding
 # ---------------------------------------------------------------------------
+@needs_mesh
 def test_zero_postwarmup_recompiles_sharded(zoo):
     """A fresh sharded engine over the same config re-uses every trace of
     a previous one (module-level jit + value-equal mesh/shardings): zero
@@ -192,18 +202,21 @@ def test_zero_postwarmup_recompiles_sharded(zoo):
 # ---------------------------------------------------------------------------
 # knob validation / default-path isolation
 # ---------------------------------------------------------------------------
+@needs_mesh
 def test_sequential_mode_rejected_under_mesh(zoo):
     with pytest.raises(ValueError, match="mixed"):
         mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4),
                   execution_mode="sequential")
 
 
+@needs_mesh
 def test_pallas_impls_rejected_under_mesh(zoo):
     with pytest.raises(ValueError, match="Pallas"):
         mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4),
                   mixed_attn_impl="pallas_interpret")
 
 
+@needs_mesh
 def test_default_engine_stays_single_device(zoo):
     """mesh=None on a multi-device host keeps everything on one device —
     the pre-sharding behavior, byte for byte."""
@@ -212,6 +225,87 @@ def test_default_engine_stays_single_device(zoo):
     assert len(eng.runner.k_pool.devices()) == 1
 
 
+@needs_mesh
 def test_host_mesh_validates_device_count():
     with pytest.raises(RuntimeError, match="xla_force_host_platform"):
         make_host_mesh(data=1000, model=1000)
+
+
+# ---------------------------------------------------------------------------
+# async ≡ sync oracle (EngineConfig.async_submission) — the one-step-
+# lookahead pipeline must be token-for-token identical to the
+# synchronous oracle.  Single-device legs run everywhere (tier-1); the
+# async × mesh combination needs the 8-device CI legs.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_async_matches_sync_oracle(zoo, arch):
+    """async_submission=True (the default) ≡ async_submission=False,
+    token for token on every arch family, with adapter churn and
+    cross-model prefix reuse in the loop; the 1.0-device-calls/step
+    invariant survives the pipeline split."""
+    sync_toks, sync_st = run_workload(
+        mk_engine(zoo, arch, None, async_submission=False))
+    async_toks, async_st = run_workload(mk_engine(zoo, arch, None))
+    assert async_toks == sync_toks
+    assert all(t for t in async_toks)
+    # churn + cross-model reuse really happened on the async side
+    assert async_st["evictions"] > 0
+    assert async_st["hits"][-1] > 0
+    # one submitted jitted step per work step, even with retirement
+    # running one step behind
+    assert async_st["mixed_calls"] == async_st["steps"]
+
+
+def test_async_preemption_recompute_equivalence(zoo):
+    """Block starvation under async submission: recompute-preemption
+    only ever fires with the pipeline drained (no in-flight step), the
+    preempted request replays host-known tokens only (PENDING
+    placeholders are dropped with the claim), and the outputs stay
+    identical to the synchronous oracle."""
+
+    def run(async_on):
+        eng = mk_engine(zoo, "granite-3.2-8b", None, num_blocks=8,
+                        max_running=2, async_submission=async_on)
+        rng = np.random.RandomState(11)
+        prompts = [list(rng.randint(10, 500, 64)) for _ in range(3)]
+        rids = [eng.submit(p, 8, adapter_name="ad1" if i == 1 else None)
+                for i, p in enumerate(prompts)]
+        eng.run_until_idle()
+        return ([eng.request(r).output_tokens for r in rids],
+                eng.preemptions)
+
+    sync_toks, sync_pre = run(False)
+    async_toks, async_pre = run(True)
+    assert sync_pre > 0 and async_pre > 0, "workload never preempted"
+    assert async_toks == sync_toks
+    assert all(len(t) == 8 for t in async_toks)
+
+
+def test_async_overlaps_and_ships_ids_only(zoo):
+    """Pipeline-shape invariants: every work step after the first is
+    assembled while the previous step is still in flight, and the only
+    per-step device→host transfer is the (R,) int32 sampled-ids array —
+    never the (R, vocab) logits."""
+    eng = mk_engine(zoo, "granite-3.2-8b", None)
+    _, st = run_workload(eng)
+    assert eng.use_async
+    # two waves -> two pipeline fills; everything else overlapped
+    assert eng.async_overlap_steps >= st["steps"] - 2
+    fetches = eng.runner.d2h_fetches
+    assert fetches and all(d == "int32" for _, d in fetches)
+    assert max(e for e, _ in fetches) < eng.cfg.vocab_size
+
+
+@needs_mesh
+@pytest.mark.parametrize("arch", ARCHS)
+def test_async_sharded_matches_sync_oracle(zoo, arch):
+    """The async pipeline composes with TP sharding: async submission
+    over the (data=2, model=4) host mesh ≡ the synchronous single-device
+    oracle, token for token, with churn + prefix reuse in the loop."""
+    base_toks, _ = run_workload(
+        mk_engine(zoo, arch, None, async_submission=False))
+    sh_toks, sh_st = run_workload(
+        mk_engine(zoo, arch, make_host_mesh(data=2, model=4)))
+    assert sh_toks == base_toks
+    assert all(t for t in sh_toks)
+    assert sh_st["mixed_calls"] == sh_st["steps"]

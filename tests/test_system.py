@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_reduced
 from repro.core.alora import AdapterSpec, init_adapter_weights
 from repro.models import init_params
-from repro.serving import Engine, speedup_table
+from repro.serving import Engine, EngineConfig, speedup_table
 from repro.serving import pipelines as P
 
 KEY = jax.random.key(0)
@@ -23,10 +23,11 @@ def setup():
     return cfg, params, w
 
 
-def run_pipeline(cfg, params, w, kind, seed):
+def run_pipeline(cfg, params, w, kind, seed, **ecfg_kw):
     spec = AdapterSpec("uq", rank=8,
                        invocation_tokens=INV if kind == "alora" else None)
-    eng = Engine(cfg, params, adapters=[(spec, w)])
+    eng = Engine(cfg, params, adapters=[(spec, w)],
+                 engine_cfg=EngineConfig(**ecfg_kw))
     res = P.base_adapter(eng, adapter_names=["uq"], prompt_len=96,
                          gen_len=32, eval_len=8, batch=2,
                          feed_back_to_base=True, seed=seed)
@@ -35,12 +36,22 @@ def run_pipeline(cfg, params, w, kind, seed):
 
 def test_paper_headline_speedup(setup):
     """aLoRA's evaluation step must beat LoRA's on prefill and TTFT once
-    jit caches are warm (the paper's Fig. 6 effect, reduced scale)."""
+    jit caches are warm (the paper's Fig. 6 effect, reduced scale).
+
+    Runs the SYNCHRONOUS oracle (async_submission=False): stage-time
+    ratios are defined under the fully-charged virtual clock, where a
+    step's entire device time lands in its stage.  The async pipeline
+    deliberately hides device time under host work, which compresses
+    per-stage attribution (both variants' prefill waits shrink toward
+    the non-overlapped remainder) while leaving tokens and e2e intact —
+    its own equivalence suite lives in test_sharded_step.py."""
     cfg, params, w = setup
     # warmup: compile every bucket for both variants
     for kind in ("lora", "alora"):
-        run_pipeline(cfg, params, w, kind, seed=99)
-    rows = {k: run_pipeline(cfg, params, w, k, seed=0)
+        run_pipeline(cfg, params, w, kind, seed=99,
+                     async_submission=False)
+    rows = {k: run_pipeline(cfg, params, w, k, seed=0,
+                            async_submission=False)
             for k in ("lora", "alora")}
     m_lora = rows["lora"][1].stage_metrics(rows["lora"][0], "eval")
     m_alora = rows["alora"][1].stage_metrics(rows["alora"][0], "eval")
