@@ -173,7 +173,8 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
                 "async submission diverged from the sync mixed oracle"
             overlap = eng.async_overlap_steps
             assert overlap >= steps - 2, (overlap, steps)
-            fetches = eng.runner.d2h_fetches
+            fetches = [(e, d) for e, d, tag in eng.runner.d2h_fetches
+                       if tag == "step"]
             assert fetches and all(d == "int32" for _, d in fetches), \
                 [d for _, d in fetches[:4]]
             max_elems = max(e for e, _ in fetches)

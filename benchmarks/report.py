@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
 BASE = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -24,7 +23,7 @@ def load(path):
     recs = []
     if os.path.exists(path):
         with open(path) as f:
-            recs = [json.loads(l) for l in f]
+            recs = [json.loads(line) for line in f]
     return recs
 
 
@@ -139,6 +138,34 @@ def sharded_step_table(recs):
               f"{r['recompiles_after_warmup']} |")
 
 
+def audit_table(recs):
+    """Compiled-step audit summary (``python -m repro.analysis`` appends
+    one record per config × mesh).  "donated HBM" is the pool footprint
+    XLA aliases in-place thanks to ``donate_argnums`` — without donation
+    that many bytes would be allocated a second time every step."""
+    print("\n### Compiled-step invariant audit\n")
+    print("| arch | mesh | status | donated outputs | donated HBM (KiB) "
+          "| output HBM (KiB) | collectives | sync≡async |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["mesh"])):
+        mem = r.get("memory") or {}
+        alias_kib = mem.get("alias_size_bytes")
+        out_kib = mem.get("output_size_bytes")
+        colls = ", ".join(f"{k}×{v}"
+                          for k, v in sorted(
+                              r["fingerprint"]["counts"].items())) or "—"
+        status = "ok" if r["ok"] else \
+            f"**FAIL** ({len(r['violations'])} violation(s)" + \
+            (", fingerprint drift)" if r.get("fingerprint_drift")
+             else ")")
+        print(f"| {r['arch']} | {r['mesh']} | {status} | "
+              f"{', '.join(r['donated']) or '—'} | "
+              f"{fmt(alias_kib / 1024 if alias_kib is not None else None, '.0f')} | "
+              f"{fmt(out_kib / 1024 if out_kib is not None else None, '.0f')} | "
+              f"{colls} | "
+              f"{'✓' if r.get('sync_async_identical') else '✗'} |")
+
+
 def main():
     pod = load(os.path.join(BASE, "dryrun_all.jsonl"))
     # dedup: last record per key wins
@@ -168,6 +195,13 @@ def main():
         for r in sharded:
             latest[(r["arch"], r["mesh"], r["smoke"])] = r
         sharded_step_table(list(latest.values()))
+    audit = load(os.path.join(BASE, "analysis_audit.jsonl"))
+    if audit:
+        # append-mode artifact: last record per (arch, mesh) wins
+        latest = {}
+        for r in audit:
+            latest[(r["arch"], r["mesh"])] = r
+        audit_table(list(latest.values()))
 
 
 if __name__ == "__main__":

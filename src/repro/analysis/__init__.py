@@ -1,0 +1,18 @@
+"""Static invariant analyzer for the serving stack.
+
+Two passes, both gating CI (run `python -m repro.analysis`):
+
+* ``step_audit``   — compiled-step HLO audit (host callbacks, ids-only
+  payload, pool donation, collective fingerprints vs goldens, bf16 /
+  dynamic-shape hygiene).  NOT imported here: it imports jax, and entry
+  points must set ``XLA_FLAGS`` for the 8-device host platform first —
+  import ``repro.analysis.step_audit`` directly after doing so.
+* ``hotpath_lint`` — AST lint of ``serving/`` + ``kernels/`` enforcing
+  the schedule/submit/retire phase discipline (no host syncs or eager
+  dispatch on the hot path).  Pure stdlib; re-exported here.
+
+See ``src/repro/analysis/README.md`` for the invariant catalogue.
+"""
+from repro.analysis.hotpath_lint import Violation, lint_files, lint_tree
+
+__all__ = ["Violation", "lint_files", "lint_tree"]

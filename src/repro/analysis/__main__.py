@@ -1,0 +1,103 @@
+"""CLI for the invariant analyzer: ``python -m repro.analysis``.
+
+Runs the hot-path lint (fast, pure AST) and the compiled-step HLO audit
+(lowers + compiles the mixed step per config × mesh).  Exits non-zero
+on any violation or fingerprint drift — this is the CI gate.
+
+Must set the XLA host-platform flags BEFORE jax initializes, so the
+jax-importing audit module is imported lazily inside ``main``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _repo_paths():
+    here = os.path.dirname(os.path.abspath(__file__))   # .../src/repro/analysis
+    src = os.path.dirname(os.path.dirname(here))
+    return os.path.dirname(src), src                    # (repo root, src/)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant analyzer: compiled-step HLO audit "
+                    "+ hot-path lint")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch names (default: all)")
+    ap.add_argument("--meshes", default=None,
+                    help="comma-separated mesh names (default: 1x1,2x4)")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help="rewrite the collective-fingerprint goldens "
+                         "instead of diffing against them")
+    ap.add_argument("--skip-audit", action="store_true",
+                    help="run only the hot-path lint")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="run only the compiled-step audit")
+    ap.add_argument("--lint-paths", nargs="*", default=None,
+                    help="lint these files instead of the repo tree "
+                         "(fixture/debug mode)")
+    ap.add_argument("--out", default=None,
+                    help="results directory for analysis_audit.jsonl + "
+                         "analysis_fingerprint_diff.txt (default: "
+                         "<repo>/results)")
+    args = ap.parse_args(argv)
+
+    repo_root, src = _repo_paths()
+    out_dir = args.out or os.path.join(repo_root, "results")
+    failed = False
+
+    if not args.skip_lint:
+        from repro.analysis.hotpath_lint import lint_files, lint_tree
+        if args.lint_paths is not None:
+            violations = lint_files(list(args.lint_paths))
+        else:
+            violations = lint_tree(src)
+        for v in violations:
+            print(v, file=sys.stderr)
+        print(f"[lint] {len(violations)} violation(s)")
+        failed |= bool(violations)
+
+    if not args.skip_audit:
+        # the 2x4 host mesh needs 8 XLA host devices; both env vars are
+        # only honored before first jax init
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        from repro.analysis.step_audit import audit_all
+        archs = args.configs.split(",") if args.configs else None
+        meshes = args.meshes.split(",") if args.meshes else None
+        results = audit_all(archs, meshes,
+                            update_goldens=args.update_goldens,
+                            progress=lambda msg: print(f"[audit] {msg}",
+                                                       flush=True))
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "analysis_audit.jsonl"),
+                  "a") as f:
+            for r in results:
+                f.write(json.dumps(r.to_json()) + "\n")
+        diff = "".join(r.fingerprint_diff for r in results)
+        diff_path = os.path.join(out_dir,
+                                 "analysis_fingerprint_diff.txt")
+        if diff:
+            with open(diff_path, "w") as f:
+                f.write(diff)
+            print(diff, file=sys.stderr)
+        elif os.path.exists(diff_path):
+            os.remove(diff_path)
+        bad = [r for r in results if not r.ok]
+        for r in bad:
+            for v in r.violations:
+                print(f"{r.arch} [{r.mesh}]: {v}", file=sys.stderr)
+        print(f"[audit] {len(results)} step(s) audited, "
+              f"{len(bad)} failing")
+        failed |= bool(bad)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

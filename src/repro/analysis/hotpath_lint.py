@@ -1,0 +1,321 @@
+"""Hot-path lint (Pass B of the invariant analyzer): an AST pass over
+``serving/`` + ``kernels/`` enforcing the phase discipline the async
+step pipeline (PR 5) established.
+
+The serving iteration is schedule → submit → retire.  Schedule and
+submit must never block on the device — the whole point of the pipeline
+is that step N's host work hides under step N-1's device compute — so
+inside ``Engine.step``'s call graph:
+
+  B1  ``np.asarray`` / ``.item()`` / ``.block_until_ready()`` /
+      ``jax.device_get`` are forbidden in schedule/submit-phase
+      functions.  They are allowed in retire-phase functions (the one
+      sanctioned sync per iteration) and the sequential-oracle path, or
+      at sites annotated ``# hotpath: sync-ok`` — and every annotated
+      site's function must route the transfer through the ``log_d2h``
+      logger so benchmarks can still account for it.  (``np.array`` is
+      the idiom for host-side construction — it never aliases a device
+      buffer, so it cannot sync.)
+  B2  no literal ``jnp.*`` op dispatch outside jit in the call graph
+      (each eager ``jnp`` op is a separate device dispatch on the host
+      path; ``jnp.asarray`` is allowlisted — it is the H2D staging
+      idiom, not an op).  Eager ``.at[].set`` pool maintenance between
+      steps (state snapshot/restore) is an accepted design and outside
+      this rule's scope.
+  B3  no ``time.*`` calls inside jit-decorated functions anywhere in
+      the scanned files (a traced ``time.time()`` is a constant baked
+      into the compiled step — always a bug).
+
+The call graph is intraprocedural over the scanned files: ``self.x()``
+resolves within the class, ``self.<attr>.x()`` through the static
+attribute table below (``runner`` → ModelRunner, ``adapter_pool`` →
+AdapterPool, ...).  Functions named in the phase tables MUST exist in
+the scanned sources — a stale entry is itself a lint error, so the
+tables cannot silently rot.  Every function in ``kernels/`` is treated
+as hot for B1 (kernels execute inside the jitted step; a host sync
+there is never right).
+
+Fixture-level behavior (each rule firing and not firing) is covered in
+``tests/test_analysis.py``; the same module also lints the real tree.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+SYNC_OK_ANNOTATION = "hotpath: sync-ok"
+D2H_LOGGER = "log_d2h"
+JNP_ALLOWED = frozenset({"asarray"})
+
+# (class, function) sets defining the retire phase (the sanctioned sync
+# point) and the sequential-oracle path (synchronous by definition).
+# Traversal stops at these: their callees inherit the exemption.
+RETIRE_PHASE: Set[Tuple[str, str]] = {
+    ("Engine", "_retire"),
+    ("Engine", "_register_decode_block"),
+    ("Engine", "_finish_requests"),
+    ("ModelRunner", "fetch_sampled"),
+}
+SEQUENTIAL_ORACLE: Set[Tuple[str, str]] = {
+    ("Engine", "_execute_decodes"),
+    ("Engine", "_execute_prefills"),
+    ("Engine", "_postprocess_decode"),
+    ("Engine", "_postprocess_prefill"),
+    ("ModelRunner", "execute_batch"),
+    ("ModelRunner", "decode_batch"),
+    ("ModelRunner", "prefill_chunk"),
+}
+# instance-attribute → class resolution for cross-object calls
+ATTR_CLASSES: Dict[str, str] = {
+    "runner": "ModelRunner",
+    "adapter_pool": "AdapterPool",
+    "host_bufs": "HostBufferPool",
+}
+ROOTS: Tuple[Tuple[str, str], ...] = (("Engine", "step"),)
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class _Func:
+    path: str
+    node: ast.FunctionDef
+    source_lines: List[str]
+
+
+def _qualname(cls: Optional[str], name: str) -> str:
+    return f"{cls}.{name}" if cls else name
+
+
+def _index_functions(paths: List[str]) -> Dict[Tuple[Optional[str], str],
+                                               _Func]:
+    """Map (class-or-None, function-name) → definition for every file."""
+    funcs: Dict[Tuple[Optional[str], str], _Func] = {}
+    for path in paths:
+        with open(path) as f:
+            src = f.read()
+        lines = src.splitlines()
+        tree = ast.parse(src, filename=path)
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                funcs[(None, node.name)] = _Func(path, node, lines)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, ast.FunctionDef):
+                        funcs[(node.name, sub.name)] = _Func(path, sub,
+                                                             lines)
+    return funcs
+
+
+def _called_targets(cls: Optional[str], fn: ast.FunctionDef,
+                    attr_classes: Dict[str, str]
+                    ) -> List[Tuple[Optional[str], str]]:
+    """Resolvable call targets inside ``fn``: ``self.x()`` → same class,
+    ``self.<attr>.x()`` / ``<anything>.<attr>.x()`` → attr table."""
+    out: List[Tuple[Optional[str], str]] = []
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        base = node.func.value
+        if isinstance(base, ast.Name) and base.id == "self" \
+                and cls is not None:
+            out.append((cls, node.func.attr))
+        elif isinstance(base, ast.Attribute) \
+                and base.attr in attr_classes:
+            out.append((attr_classes[base.attr], node.func.attr))
+    return out
+
+
+def _reachable_hot(funcs, roots, stop, attr_classes
+                   ) -> Set[Tuple[Optional[str], str]]:
+    """BFS the call graph from ``roots``; do not descend into ``stop``
+    entries (retire/oracle — allowed to sync, callees inherit)."""
+    seen: Set[Tuple[Optional[str], str]] = set()
+    frontier: List[Tuple[Optional[str], str]] = \
+        [r for r in roots if r in funcs]
+    while frontier:
+        key = frontier.pop()
+        if key in seen or key in stop:
+            continue
+        seen.add(key)
+        fobj = funcs[key]
+        for tgt in _called_targets(key[0], fobj.node, attr_classes):
+            if tgt in funcs and tgt not in seen:
+                frontier.append(tgt)
+    return seen
+
+
+def _is_jit_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        expr = dec.func if isinstance(dec, ast.Call) else dec
+        # @jax.jit / @jit
+        if isinstance(expr, ast.Attribute) and expr.attr == "jit":
+            return True
+        if isinstance(expr, ast.Name) and expr.id == "jit":
+            return True
+        # @partial(jax.jit, ...) / @partial(jit, ...)
+        if isinstance(dec, ast.Call) and isinstance(dec.func, ast.Name) \
+                and dec.func.id == "partial" and dec.args:
+            a0 = dec.args[0]
+            if (isinstance(a0, ast.Attribute) and a0.attr == "jit") or \
+                    (isinstance(a0, ast.Name) and a0.id == "jit"):
+                return True
+    return False
+
+
+def _sync_call_kind(node: ast.Call) -> Optional[str]:
+    """Classify a call as one of the forbidden blocking constructs."""
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    if f.attr == "asarray" and isinstance(f.value, ast.Name) \
+            and f.value.id in ("np", "numpy"):
+        return "np.asarray"
+    if f.attr == "device_get" and isinstance(f.value, ast.Name) \
+            and f.value.id == "jax":
+        return "jax.device_get"
+    if f.attr == "block_until_ready":
+        return ".block_until_ready()"
+    if f.attr == "item" and not node.args and not node.keywords:
+        return ".item()"
+    return None
+
+
+def _line_annotated(lines: List[str], lineno: int) -> bool:
+    """True if the 1-based source line (or the line above it — for
+    call expressions wrapped across lines) carries the annotation."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and SYNC_OK_ANNOTATION in lines[ln - 1]:
+            return True
+    return False
+
+
+def _calls_logger(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id == D2H_LOGGER:
+                return True
+            if isinstance(f, ast.Attribute) and f.attr == D2H_LOGGER:
+                return True
+    return False
+
+
+def _check_hot_function(key, fobj: _Func, jnp_rule: bool
+                        ) -> List[Violation]:
+    out: List[Violation] = []
+    fn, lines = fobj.node, fobj.source_lines
+    qn = _qualname(*key)
+    jitted = _is_jit_decorated(fn)
+    logs = _calls_logger(fn)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        kind = _sync_call_kind(node)
+        if kind is not None:
+            if _line_annotated(lines, node.lineno):
+                if not logs:
+                    out.append(Violation(
+                        fobj.path, node.lineno, "sync-unlogged",
+                        f"{qn}: '{SYNC_OK_ANNOTATION}' site ({kind}) in "
+                        f"a function that never calls {D2H_LOGGER} — "
+                        "annotated syncs must stay accountable in "
+                        "d2h_fetches"))
+            else:
+                out.append(Violation(
+                    fobj.path, node.lineno, "hot-sync",
+                    f"{qn}: {kind} in a schedule/submit-phase function "
+                    "— blocks the async pipeline; move it to the retire "
+                    f"phase or annotate '# {SYNC_OK_ANNOTATION}' and "
+                    f"log via {D2H_LOGGER}"))
+        if jnp_rule and not jitted \
+                and isinstance(node.func, ast.Attribute) \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == "jnp" \
+                and node.func.attr not in JNP_ALLOWED:
+            out.append(Violation(
+                fobj.path, node.lineno, "jnp-outside-jit",
+                f"{qn}: eager jnp.{node.func.attr}() outside jit on the "
+                "step path — each eager op is its own device dispatch; "
+                "move it inside the jitted step or assemble in numpy"))
+    return out
+
+
+def _check_jitted_time(funcs) -> List[Violation]:
+    out: List[Violation] = []
+    for key, fobj in funcs.items():
+        if not _is_jit_decorated(fobj.node):
+            continue
+        for node in ast.walk(fobj.node):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == "time":
+                out.append(Violation(
+                    fobj.path, node.lineno, "time-in-jit",
+                    f"{_qualname(*key)}: time.{node.func.attr}() inside "
+                    "a jitted function — traces to a compile-time "
+                    "constant, never a measurement"))
+    return out
+
+
+def lint_files(paths: List[str], *,
+               kernel_paths: Tuple[str, ...] = (),
+               roots: Tuple[Tuple[str, str], ...] = ROOTS,
+               retire: Optional[Set[Tuple[str, str]]] = None,
+               oracle: Optional[Set[Tuple[str, str]]] = None,
+               attr_classes: Optional[Dict[str, str]] = None
+               ) -> List[Violation]:
+    """Lint ``paths`` (call-graph rules B1/B2 from ``roots``) plus
+    ``kernel_paths`` (B1 everywhere) plus B3 over everything."""
+    retire = RETIRE_PHASE if retire is None else retire
+    oracle = SEQUENTIAL_ORACLE if oracle is None else oracle
+    attr_classes = ATTR_CLASSES if attr_classes is None else attr_classes
+    funcs = _index_functions(list(paths))
+    kfuncs = _index_functions(list(kernel_paths))
+    violations: List[Violation] = []
+    # phase tables must describe code that exists — a stale entry would
+    # silently widen (or shrink) the checked surface
+    for label, table in (("retire", retire), ("oracle", oracle),
+                         ("root", set(roots))):
+        for entry in sorted(table):
+            if entry not in funcs:
+                violations.append(Violation(
+                    "<phase-tables>", 0, "phase-table",
+                    f"{label} entry {_qualname(*entry)} not found in the "
+                    "scanned sources — update the table"))
+    stop = retire | oracle
+    hot = _reachable_hot(funcs, roots, stop, attr_classes)
+    for key in sorted(hot, key=lambda k: (k[0] or "", k[1])):
+        violations.extend(_check_hot_function(key, funcs[key],
+                                              jnp_rule=True))
+    for key in sorted(kfuncs, key=lambda k: (k[0] or "", k[1])):
+        violations.extend(_check_hot_function(key, kfuncs[key],
+                                              jnp_rule=False))
+    violations.extend(_check_jitted_time({**funcs, **kfuncs}))
+    return violations
+
+
+def lint_tree(src_root: str) -> List[Violation]:
+    """Lint the repo's serving + kernels trees with the default tables.
+    ``src_root`` is the directory containing the ``repro`` package."""
+    serving = os.path.join(src_root, "repro", "serving")
+    kernels = os.path.join(src_root, "repro", "kernels")
+    paths = sorted(os.path.join(serving, f) for f in os.listdir(serving)
+                   if f.endswith(".py"))
+    kpaths = tuple(sorted(os.path.join(kernels, f)
+                          for f in os.listdir(kernels)
+                          if f.endswith(".py")))
+    return lint_files(paths, kernel_paths=kpaths)

@@ -14,15 +14,17 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 # v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link (~)
 
+# fractional byte widths (s4/u4 pack two elements per byte); keep the
+# exact value through accounting and round only at the summary edge
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4,
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
@@ -35,11 +37,11 @@ COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
 _OP_RE = re.compile(
     r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(")
+    r"(-start|-done)?\(")
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
+def _shape_bytes(dtype: str, dims: str) -> float:
     n = 1
     if dims:
         for d in dims.split(","):
@@ -49,12 +51,13 @@ def _shape_bytes(dtype: str, dims: str) -> int:
 
 @dataclass
 class CollectiveStats:
-    # result bytes per collective kind (per-chip shard sizes)
-    by_kind: Dict[str, int] = field(default_factory=dict)
+    # result bytes per collective kind (per-chip shard sizes; fractional
+    # for sub-byte dtypes — rounded only at the summary edge below)
+    by_kind: Dict[str, float] = field(default_factory=dict)
     counts: Dict[str, int] = field(default_factory=dict)
 
     def total_result_bytes(self) -> int:
-        return sum(self.by_kind.values())
+        return int(round(sum(self.by_kind.values())))
 
     def wire_bytes(self, n_shards: int = 16) -> float:
         """Ring-algorithm wire-traffic estimate per chip."""
@@ -72,19 +75,17 @@ class CollectiveStats:
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     stats = CollectiveStats()
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
-        tuple_body, dtype, dims, kind = m.groups()
+        tuple_body, dtype, dims, kind, suffix = m.groups()
+        # async pairs (-start/-done) appear twice; count the op once, at
+        # its -start line (which carries the transferred result shape)
+        if suffix == "-done":
+            continue
         if tuple_body is not None:
             nbytes = sum(_shape_bytes(d, s)
                          for d, s in _SHAPE_RE.findall(tuple_body))
         else:
             nbytes = _shape_bytes(dtype, dims)
-        # async pairs (-start/-done) appear twice; count the op once
-        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
-        header = hlo_text[line_start:m.start()]
-        if "-done" in hlo_text[m.start():m.end()]:
-            continue
         stats.by_kind[kind] = stats.by_kind.get(kind, 0) + nbytes
         stats.counts[kind] = stats.counts.get(kind, 0) + 1
     return stats

@@ -1,9 +1,13 @@
 """Serving engine: paged KV cache + cross-model prefix reuse + aLoRA +
 dynamic adapter lifecycle (paged adapter-slot pool)."""
-from repro.serving.adapter_pool import AdapterPool  # noqa: F401
-from repro.serving.engine import Engine, EngineConfig  # noqa: F401
-from repro.serving.metrics import (AdapterPoolStats,  # noqa: F401
-                                   aggregate, MetricsAggregate,
-                                   speedup_table)
-from repro.serving.request import Request, State  # noqa: F401
-from repro.serving.runner import ModelRunner, RunnerConfig  # noqa: F401
+from repro.serving.adapter_pool import AdapterPool
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.metrics import AdapterPoolStats, MetricsAggregate, aggregate, speedup_table
+from repro.serving.request import Request, State
+from repro.serving.runner import ModelRunner, RunnerConfig
+
+__all__ = [
+    "AdapterPool", "AdapterPoolStats", "Engine", "EngineConfig",
+    "MetricsAggregate", "ModelRunner", "Request", "RunnerConfig", "State",
+    "aggregate", "speedup_table",
+]

@@ -72,9 +72,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.alora import (AdapterSpec, adapter_rank_of,
-                              pad_adapter_rank, per_layer_adapters,
-                              zero_adapter_weights)
+from repro.core.alora import (
+    AdapterSpec,
+    adapter_rank_of,
+    pad_adapter_rank,
+    per_layer_adapters,
+    zero_adapter_weights,
+)
 from repro.serving.metrics import AdapterPoolStats
 
 Params = Dict[str, Any]

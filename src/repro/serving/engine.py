@@ -40,28 +40,23 @@ the per-step device→host payload is a handful of int32 ids instead of
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.configs.base import ATTN, ModelConfig
-from repro.core.activation_mask import (adapter_index_for_positions,
-                                        find_invocation_start)
+from repro.configs.base import ModelConfig
+from repro.core.activation_mask import adapter_index_for_positions, find_invocation_start
 from repro.core.alora import AdapterSpec
-from repro.core.block_hash import (block_extra, hash_block,
-                                   request_block_hashes)
+from repro.core.block_hash import block_extra, hash_block, request_block_hashes
 from repro.core.kv_manager import BlockManager, OutOfBlocks
 from repro.core.prefix_cache import PrefixCache
-from repro.models.model import Runtime, period_segments
-from repro.serving.adapter_pool import (AdapterPool, AdapterRegistration,
-                                        rank_bucket)
-from repro.serving.metrics import (AdapterPoolStats, MetricsAggregate,
-                                   aggregate)
+from repro.models.model import Runtime
+from repro.serving.adapter_pool import AdapterPool, AdapterRegistration, rank_bucket
+from repro.serving.metrics import AdapterPoolStats, MetricsAggregate, aggregate
 from repro.serving.request import Request, State
-from repro.serving.runner import (MixedBatch, ModelRunner, RunnerConfig,
-                                  StepHandle)
+from repro.serving.runner import MixedBatch, ModelRunner, RunnerConfig, StepHandle
 
 # placeholder a submitted-but-unretired step leaves in output_tokens:
 # the token's VALUE is still on device (patched at retire); its position
@@ -390,9 +385,11 @@ class Engine:
                 self.runner.reset_live(req.run_slot)
 
         # embeddings + (whisper) encoder KV.  Kept host-side (numpy) so
-        # the mixed-batch assembly packs rows without device round-trips.
-        req.input_embeds = np.asarray(self.runner.build_input_embeds(
-            req.prompt, req.prefix_embeds))
+        # the mixed-batch assembly packs rows without device round-trips
+        # (the one admission-time sync happens inside build_input_embeds,
+        # annotated and logged there).
+        req.input_embeds = self.runner.build_input_embeds(
+            req.prompt, req.prefix_embeds)
         if self.cfg.is_encoder_decoder:
             assert req.frame_embeds is not None
             self._xkv[req.req_id] = self.runner.encode(req.frame_embeds)
@@ -826,14 +823,14 @@ class Engine:
             n = hi - lo
             sl = slice(t, t + n)
             pr = np.arange(lo, hi)
-            embeds[sl] = np.asarray(r.input_embeds[lo:hi], np.float32)
+            embeds[sl] = r.input_embeds[lo:hi]
             use_embeds[sl] = True
             positions[sl] = pr
             adapter_idx[sl] = self._adapter_idx(r, pr)
             req_rows[sl] = row
             row_cols[sl] = pr - lo
             if self.kv_mgr is not None:
-                bids = np.asarray(r.block_ids, np.int32)
+                bids = np.array(r.block_ids, np.int32)
                 write_bids[sl] = bids[pr // bs]
                 write_offs[sl] = pr % bs
             out_rows[row] = t + n - 1
@@ -864,9 +861,9 @@ class Engine:
                         row_cols=row_cols, write_bids=write_bids,
                         write_offs=write_offs, block_tables=block_tables,
                         out_rows=out_rows, run_slots=run_slots,
-                        snap_rows=np.asarray(snap_rows, np.int32),
+                        snap_rows=np.array(snap_rows, np.int32),
                         xkv_list=xkv_list,
-                        active_slots=np.asarray(active, np.int32))
+                        active_slots=np.array(active, np.int32))
         self.t_assembly += time.perf_counter() - t_host
         t0 = time.perf_counter()
         handle = self.runner.submit_batch(mb)   # one jitted call, no sync

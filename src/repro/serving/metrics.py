@@ -3,7 +3,7 @@ equivalent: the engine records per-request stage timings; this module
 aggregates them per pipeline stage for the benchmark tables."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, List
 
 import numpy as np

@@ -11,12 +11,12 @@ headline numbers)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from repro.serving.engine import Engine
-from repro.serving.metrics import MetricsAggregate, aggregate
+from repro.serving.metrics import MetricsAggregate
 
 
 @dataclass

@@ -65,8 +65,7 @@ import numpy as np
 from repro.configs.base import ATTN, SSM, ModelConfig
 from repro.distributed import sharding as shd
 from repro.distributed.sharding import StepShardings
-from repro.kernels.ref import (packed_cross_attention_ref,
-                               paged_attention_ref)
+from repro.kernels.ref import packed_cross_attention_ref, paged_attention_ref
 from repro.models import attention as attn_dispatch
 from repro.models import layers as Lyr
 from repro.models import model as M
@@ -81,6 +80,34 @@ def next_pow2(n: int, lo: int = 1) -> int:
     while v < n:
         v *= 2
     return v
+
+
+# bounded device→host fetch log (``ModelRunner.d2h_fetches``): trim the
+# OLDEST half in bulk at the threshold so a long-lived engine never
+# accumulates one entry per step forever
+D2H_LOG_MAX = 4096
+D2H_LOG_KEEP = 2048
+
+
+def log_d2h(log: List[Tuple[int, str, str]], elems: int, dtype: str,
+            tag: str) -> None:
+    """Record one blocking device→host transfer as ``(elems, dtype, tag)``.
+
+    Every host sync on the serving path must route through this logger —
+    the hot-path lint (``repro.analysis.hotpath_lint``) rejects any
+    ``# hotpath: sync-ok`` site whose function doesn't.  Tags:
+
+      "step"  — the per-step sampled-ids fetch (benchmarks/tests assert
+                the ids-only payload over exactly these entries)
+      "xkv"   — enc-dec encoder-KV restack on a batch-membership miss
+      "admit" — admission-time prompt-embedding materialization
+
+    Overflow trims in bulk, keeping the most recent ``D2H_LOG_KEEP``
+    entries in order (unit-tested in ``tests/test_analysis.py``).
+    """
+    if len(log) >= D2H_LOG_MAX:
+        del log[:len(log) - D2H_LOG_KEEP]
+    log.append((elems, dtype, tag))
 
 
 @dataclass(frozen=True)
@@ -221,8 +248,15 @@ def _chunk_attention(q, past_k, past_v, past_len, new_k, new_v,
 
 # ---------------------------------------------------------------------------
 # jitted step functions (module level, static spec)
+#
+# The device pools (K/V, SSM live state, tok_buf) are DONATED to every
+# step: each is consumed and returned updated, so without donation XLA
+# would hold both generations live across the call — double the pool HBM.
+# ``repro.analysis.step_audit`` statically verifies the aliasing survived
+# compilation (input_output_alias) on every config × mesh; the HBM delta
+# shows up in ``benchmarks/report.py``'s audit table.
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4, 5, 6))
 def _prefill_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
                   live_ssm, live_conv, x_chunk, valid_len, start_pos,
                   block_table, adapter_idx, run_slot, xkv):
@@ -286,7 +320,7 @@ def _prefill_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
     return (k_pool, v_pool, live_ssm, live_conv, b_ssm, b_conv, logits)
 
 
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4, 5, 6))
 def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
                  live_ssm, live_conv, tokens, positions, block_tables,
                  lengths, adapter_idx, run_slots, write_bids, write_offs,
@@ -331,7 +365,7 @@ def _decode_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
     return k_pool, v_pool, live_ssm, live_conv, logits
 
 
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=0, donate_argnums=(3, 4, 5, 6, 7))
 def _mixed_impl(spec: RunnerSpec, params, adapter_layers, k_pool, v_pool,
                 live_ssm, live_conv, tok_buf, tok_ids, embeds, use_embeds,
                 from_buf, positions, q_lens, adapter_idx, active_slots,
@@ -595,10 +629,11 @@ class ModelRunner:
         # runner-side host prep time (bucket padding + xkv stacking);
         # the engine adds its packing time — the benchmark reports the sum
         self.t_assembly = 0.0
-        # (elements, dtype) of every blocking device→host fetch on the
-        # mixed path — benchmarks assert the per-step D2H payload is the
-        # sampled int32 ids, never the (R, vocab) logits
-        self.d2h_fetches: List[Tuple[int, str]] = []
+        # (elements, dtype, tag) of every blocking device→host fetch on
+        # the serving path — benchmarks assert the per-step ("step" tag)
+        # D2H payload is the sampled int32 ids, never the (R, vocab)
+        # logits; see ``log_d2h`` for the tag vocabulary
+        self.d2h_fetches: List[Tuple[int, str, str]] = []
 
         # per-layer adapter stacks aligned with layer order (the shared
         # AdapterPool list, or inert Nones for adapter-free engines)
@@ -672,13 +707,20 @@ class ModelRunner:
         return self.params["embed"]["tok"][jnp.asarray(tokens)]
 
     def build_input_embeds(self, prompt: List[int],
-                           prefix_embeds: Optional[np.ndarray]) -> jax.Array:
-        emb = self.embed_tokens(np.asarray(prompt, np.int32))
+                           prefix_embeds: Optional[np.ndarray]) -> np.ndarray:
+        """Materialize a request's prompt embeddings HOST-SIDE (numpy) at
+        admission, so every later mixed-batch assembly packs its rows
+        with plain slice copies and zero device round-trips.  The one
+        device→host sync this costs happens once per admitted request,
+        never per step, and is logged under the "admit" tag."""
+        emb = np.asarray(  # hotpath: sync-ok (once per admission)
+            self.embed_tokens(np.array(prompt, np.int32)))
+        log_d2h(self.d2h_fetches, int(emb.size), str(emb.dtype), "admit")
         if prefix_embeds is not None:
-            pe = jnp.asarray(prefix_embeds, emb.dtype)
+            pe = prefix_embeds.astype(emb.dtype, copy=False)
             # hashing pseudo-tokens already cover the patch prefix; the
             # embeds replace the leading len(pe) rows
-            emb = jnp.concatenate([pe, emb[len(pe):]], axis=0) \
+            emb = np.concatenate([pe, emb[len(pe):]], axis=0) \
                 if len(prompt) >= pe.shape[0] else pe
         return emb
 
@@ -696,20 +738,13 @@ class ModelRunner:
     # ------------------------------------------------------------------
     # unified mixed-batch step (decode tokens + prefill chunks, one call)
     # ------------------------------------------------------------------
-    def submit_batch(self, mb: MixedBatch) -> StepHandle:
-        """Dispatch one mixed ragged batch as a single jitted device call
-        WITHOUT blocking on its result.
-
-        Returns a :class:`StepHandle` whose ``sampled`` array holds the
-        on-device argmax-sampled token id per request row (taken at that
-        request's last packed token) and whose ``boundary`` is ``None``
-        for attention-only archs, else a ``(b_ssm (Ls, Cb, nh, N, P),
-        b_conv (Ls, Cb, W-1, ch))`` pair of post-token SSM states at the
-        batch's ``snap_rows`` (prefill block boundaries), in snap-row
-        order, for prefix-cache state registration.  The caller retires
-        the handle with :meth:`fetch_sampled` — in async mode only after
-        the NEXT step has been submitted.
-        """
+    def _assemble_mixed(self, mb: MixedBatch) -> Tuple:
+        """Host-side half of :meth:`submit_batch`: bucket the ragged
+        batch into the pooled pow2-padded staging buffers and stage the
+        metadata on device.  Returns the EXACT positional argument tuple
+        ``_mixed_impl`` is dispatched with — :meth:`lower_mixed` lowers
+        the same tuple, so the static auditor analyzes precisely the
+        compiled artifact production dispatches."""
         t_host = time.perf_counter()
         # new staging generation: never rewrite buffers the (at most
         # one) still-executing previous step may alias zero-copy
@@ -776,15 +811,37 @@ class ModelRunner:
             if mb.xkv_list is not None else None
         self.t_assembly += time.perf_counter() - t_host
 
-        self.call_counts["mixed_step"] += 1
         meta = self._dev((tok, emb, use, fb, pos, qln, ad, act, bt, rows,
                           cols, wb, wo, out_rows, run_slots, tok_slots,
                           snap))
+        return (self._spec, self.params, self.adapter_layers, self.k_pool,
+                self.v_pool, self.live_ssm, self.live_conv, self.tok_buf,
+                *meta, xkv)
+
+    def submit_batch(self, mb: MixedBatch) -> StepHandle:
+        """Dispatch one mixed ragged batch as a single jitted device call
+        WITHOUT blocking on its result.
+
+        Returns a :class:`StepHandle` whose ``sampled`` array holds the
+        on-device argmax-sampled token id per request row (taken at that
+        request's last packed token) and whose ``boundary`` is ``None``
+        for attention-only archs, else a ``(b_ssm (Ls, Cb, nh, N, P),
+        b_conv (Ls, Cb, W-1, ch))`` pair of post-token SSM states at the
+        batch's ``snap_rows`` (prefill block boundaries), in snap-row
+        order, for prefix-cache state registration.  The caller retires
+        the handle with :meth:`fetch_sampled` — in async mode only after
+        the NEXT step has been submitted.
+
+        The pools ride donated through the call (``_mixed_impl``'s
+        ``donate_argnums``) and are immediately rebound to the step's
+        outputs below — the pre-step arrays are dead the moment the step
+        is dispatched, and XLA reuses their buffers for the outputs.
+        """
+        R = len(mb.block_tables)
+        args = self._assemble_mixed(mb)
+        self.call_counts["mixed_step"] += 1
         (self.k_pool, self.v_pool, live_ssm, live_conv, self.tok_buf,
-         b_ssm, b_conv, sampled) = _mixed_impl(
-            self._spec, self.params, self.adapter_layers, self.k_pool,
-            self.v_pool, self.live_ssm, self.live_conv, self.tok_buf,
-            *meta, xkv)
+         b_ssm, b_conv, sampled) = _mixed_impl(*args)
         boundary = None
         if self.Ls:
             self.live_ssm, self.live_conv = live_ssm, live_conv
@@ -792,17 +849,23 @@ class ModelRunner:
         return StepHandle(sampled=sampled, boundary=boundary,
                           n_requests=R)
 
+    def lower_mixed(self, mb: MixedBatch):
+        """Lower (but do not execute) the mixed step EXACTLY as
+        :meth:`submit_batch` would dispatch it — same jitted function,
+        same static spec, same donation, same bucketed shapes — and
+        return the :class:`jax.stages.Lowered`.  This is the entry point
+        of the compiled-step auditor (``repro.analysis.step_audit``):
+        auditing anything other than this tuple would verify a step
+        production never runs."""
+        return _mixed_impl.lower(*self._assemble_mixed(mb))
+
     def fetch_sampled(self, handle: StepHandle) -> np.ndarray:
         """Block until ``handle``'s step finished and return its sampled
-        token ids, (R,) int32 — the mixed path's ONLY device→host
-        transfer (a few bytes per request, never the full logits)."""
-        # bounded diagnostic log (benchmarks/tests assert payload shape/
-        # dtype over it): trim in bulk so a long-lived engine never
-        # accumulates one entry per step forever
-        if len(self.d2h_fetches) >= 4096:
-            del self.d2h_fetches[:2048]
-        self.d2h_fetches.append((int(handle.sampled.size),
-                                 str(np.dtype(handle.sampled.dtype))))
+        token ids, (R,) int32 — the mixed path's ONLY per-step
+        device→host transfer (a few bytes per request, never the full
+        logits).  Retire-phase: the blocking sync is allowed here."""
+        log_d2h(self.d2h_fetches, int(handle.sampled.size),
+                str(np.dtype(handle.sampled.dtype)), "step")
         return np.asarray(handle.sampled)[:handle.n_requests]
 
     def execute_batch(self, mb: MixedBatch):
@@ -832,8 +895,10 @@ class ModelRunner:
         xk = np.zeros((self.La, Rb, Se, KV, hd), dtype)
         xv = np.zeros_like(xk)
         for i, (_, (k_, v_)) in enumerate(xkv_list):
-            xk[:, i] = np.asarray(k_)
-            xv[:, i] = np.asarray(v_)
+            xk[:, i] = np.asarray(k_)  # hotpath: sync-ok (membership miss)
+            xv[:, i] = np.asarray(v_)  # hotpath: sync-ok (membership miss)
+        log_d2h(self.d2h_fetches, int(xk.size + xv.size), str(xk.dtype),
+                "xkv")
         stacked = (self._dev(xk), self._dev(xv))
         self._xkv_stack = (key, stacked)
         return stacked

@@ -1,0 +1,453 @@
+"""Tier-1 coverage for the invariant analyzer (``repro.analysis``):
+
+* ``parse_collectives`` / byte-accounting satellites (tuple results,
+  -start/-done dedup, fractional s4 widths, round-at-the-edge);
+* the ``d2h_fetches`` ring-buffer trim;
+* every Pass-A check against synthetic HLO snippets, firing and not;
+* every Pass-B lint rule against AST fixtures, firing and not;
+* the real tree lints clean, the real goldens are checked in for every
+  config × mesh, and one real compiled-step audit passes end to end;
+* the CLI's exit-code contract.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hotpath_lint import lint_files, lint_tree
+from repro.analysis.step_audit import (
+    MESHES,
+    check_bf16_upcasts,
+    check_donation,
+    check_dynamic_shapes,
+    check_host_callbacks,
+    check_payload,
+    diff_fingerprint,
+    entry_body,
+    golden_path,
+    parse_aliases,
+)
+from repro.launch.hlo_analysis import CollectiveStats, _shape_bytes, parse_collectives
+from repro.serving.runner import D2H_LOG_KEEP, D2H_LOG_MAX, log_d2h, next_pow2
+
+SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------- satellite: parse_collectives
+def test_parse_collectives_scalar_shape():
+    s = parse_collectives(
+        "%ar = f32[128]{0} all-reduce(%x), replica_groups={}\n")
+    assert s.counts == {"all-reduce": 1}
+    assert s.by_kind == {"all-reduce": 512.0}
+    assert s.total_result_bytes() == 512
+
+
+def test_parse_collectives_tuple_shape():
+    s = parse_collectives(
+        "%ar = (f32[128]{0}, bf16[64]{0}) all-reduce(%a, %b)\n")
+    assert s.counts == {"all-reduce": 1}
+    assert s.by_kind["all-reduce"] == 128 * 4 + 64 * 2
+
+
+def test_parse_collectives_start_done_dedup():
+    txt = ("%ag-s = bf16[2,64]{1,0} all-gather-start(%x)\n"
+           "%ag-d = bf16[2,64]{1,0} all-gather-done(%ag-s)\n")
+    s = parse_collectives(txt)
+    assert s.counts == {"all-gather": 1}
+    assert s.by_kind["all-gather"] == 2 * 64 * 2
+
+
+def test_parse_collectives_multi_kind():
+    txt = ("%a = f32[128]{0} all-reduce(%x)\n"
+           "%b = s8[100]{0} collective-permute(%y)\n"
+           "%c = (f32[8]{0}, f32[8]{0}) all-to-all(%u, %v)\n"
+           "%d = f32[128]{0} all-reduce(%z)\n")
+    s = parse_collectives(txt)
+    assert s.counts == {"all-reduce": 2, "collective-permute": 1,
+                       "all-to-all": 1}
+    assert s.by_kind == {"all-reduce": 1024.0, "collective-permute": 100.0,
+                        "all-to-all": 64.0}
+
+
+def test_sub_byte_dtypes_round_only_at_edge():
+    assert _shape_bytes("s4", "1") == 0.5
+    assert _shape_bytes("u4", "8") == 4.0
+    s = CollectiveStats(by_kind={"all-gather": 0.5, "all-reduce": 1.9})
+    assert s.total_result_bytes() == 2      # round(2.4)
+    # fractional values survive inside the accounting itself
+    assert s.by_kind["all-gather"] == 0.5
+
+
+# ------------------------------------------------ satellite: d2h ring trim
+def test_d2h_log_ring_buffer_trims_keeping_recent():
+    log = []
+    n = D2H_LOG_MAX + 100
+    for i in range(n):
+        log_d2h(log, i, "int32", "step")
+    assert len(log) < D2H_LOG_MAX
+    elems = [e for e, _, _ in log]
+    # most recent entries, in order, contiguous
+    assert elems == list(range(n - len(log), n))
+    assert log[-1] == (n - 1, "int32", "step")
+    # trim fired exactly when full: kept KEEP then kept appending
+    assert len(log) == D2H_LOG_KEEP + (n - D2H_LOG_MAX)
+
+
+# --------------------------------------------------- Pass A: HLO checks
+CLEAN_HLO = """\
+HloModule step, input_output_alias={ {0}: (3, {}, may-alias), {1}: (4, {}, may-alias) }
+
+%fused (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  ROOT %n = f32[4]{0} negate(%a)
+}
+
+ENTRY %main (p0: f32[4], p1: f32[4]) -> (f32[4], f32[4], s32[4]) {
+  %p0 = f32[4]{0} parameter(0)
+  %p1 = f32[4]{0} parameter(1)
+  %s = s32[4]{0} constant({0, 1, 2, 3})
+  ROOT %t = (f32[4]{0}, f32[4]{0}, s32[4]{0}) tuple(%p0, %p1, %s)
+}
+"""
+
+
+def test_host_callback_clean_and_firing():
+    assert check_host_callbacks(CLEAN_HLO) == []
+    bad = CLEAN_HLO.replace(
+        "negate(%a)", 'custom-call(%a), custom_call_target="my_cb"')
+    vs = check_host_callbacks(bad)
+    assert len(vs) == 1 and "my_cb" in vs[0]
+    # allowlisted device-side custom calls (XLA's TopK expansion, from
+    # the MoE router) are not host callbacks
+    topk = CLEAN_HLO.replace(
+        "negate(%a)", 'custom-call(%a), custom_call_target="TopK"')
+    assert check_host_callbacks(topk) == []
+    assert any("infeed" in v for v in check_host_callbacks(
+        CLEAN_HLO + "  %i = token[] infeed(%tok)\n"))
+
+
+def test_dynamic_shape_markers():
+    assert check_dynamic_shapes(CLEAN_HLO) == []
+    assert check_dynamic_shapes(
+        CLEAN_HLO.replace("f32[4]{0} negate", "f32[<=4]{0} negate"))
+
+
+def test_bf16_upcast_inline_and_defmap():
+    inline = "%c = f32[64,64]{1,0} convert(bf16[64,64]{1,0} %w)\n"
+    assert check_bf16_upcasts(inline, threshold_elems=64 * 64)
+    # below the param-size threshold: activations may upcast
+    assert check_bf16_upcasts(inline, threshold_elems=64 * 64 + 1) == []
+    defmap = ("%w = bf16[64,64]{1,0} parameter(0)\n"
+              "%c = f32[64,64]{1,0} convert(%w)\n")
+    assert check_bf16_upcasts(defmap, threshold_elems=64 * 64)
+    # f32 source: not an upcast of bf16
+    f32src = "%c = f32[64,64]{1,0} convert(s32[64,64]{1,0} %w)\n"
+    assert check_bf16_upcasts(f32src, threshold_elems=1) == []
+
+
+def test_parse_aliases_and_entry_body():
+    assert parse_aliases(CLEAN_HLO) == {0: 3, 1: 4}
+    assert parse_aliases("HloModule step\nENTRY %m {\n}\n") == {}
+    body = entry_body(CLEAN_HLO)
+    # the inner computation's ROOT must not leak into the entry body
+    assert "negate" not in body and "tuple(" in body
+
+
+def _leaf(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class _Cfg:
+    vocab_size = 512
+
+
+GOOD_LEAVES = [
+    ("k_pool", _leaf((2, 8, 4), jnp.float32)),
+    ("v_pool", _leaf((2, 8, 4), jnp.float32)),
+    ("tok_buf", _leaf((8,), jnp.int32)),
+    ("b_ssm", _leaf((), jnp.int32)),
+    ("b_conv", _leaf((), jnp.int32)),
+    ("sampled", _leaf((8,), jnp.int32)),
+]
+GOOD_ALIASES = {0: 3, 1: 4, 2: 7}
+
+
+def test_payload_clean():
+    assert check_payload(GOOD_LEAVES, GOOD_ALIASES, _Cfg(), 5) == []
+
+
+def test_payload_rejects_undonated_pool_and_vocab_and_sampled():
+    # pool falls out of the alias map -> it became host payload
+    vs = check_payload(GOOD_LEAVES, {1: 4, 2: 7}, _Cfg(), 5)
+    assert any("k_pool" in v and "ids-only" in v for v in vs)
+    # (R, vocab) logits-shaped host output
+    leaves = GOOD_LEAVES[:-1] + [("sampled", _leaf((8,), jnp.int32)),
+                                 ("b_ssm", _leaf((4, 512), jnp.float32))]
+    assert any("vocab" in v for v in check_payload(
+        leaves, GOOD_ALIASES, _Cfg(), 5))
+    # sampled must be small 1-D s32
+    bad = GOOD_LEAVES[:-1] + [("sampled", _leaf((8, 2), jnp.float32))]
+    assert any("sampled" in v for v in check_payload(
+        bad, GOOD_ALIASES, _Cfg(), 5))
+    big = GOOD_LEAVES[:-1] + [("sampled",
+                               _leaf((2 * next_pow2(5),), jnp.int32))]
+    assert any("sampled" in v for v in check_payload(
+        big, GOOD_ALIASES, _Cfg(), 5))
+
+
+def test_donation_clean_and_firing():
+    vs, donated = check_donation(GOOD_LEAVES, GOOD_ALIASES, has_ssm=False)
+    assert vs == [] and donated == ["k_pool", "tok_buf", "v_pool"]
+    # missing pool alias
+    vs, _ = check_donation(GOOD_LEAVES, {0: 3, 1: 4}, has_ssm=False)
+    assert any("tok_buf" in v and "not in input_output_alias" in v
+               for v in vs)
+    # alias of a non-pool output
+    vs, _ = check_donation(GOOD_LEAVES, {**GOOD_ALIASES, 5: 9},
+                           has_ssm=False)
+    assert any("unexpected alias" in v for v in vs)
+    # SSM arch must emit + donate its live pools
+    vs, _ = check_donation(GOOD_LEAVES, GOOD_ALIASES, has_ssm=True)
+    assert any("live_ssm" in v and "absent" in v for v in vs)
+
+
+def test_fingerprint_diff():
+    fp = {"counts": {"all-reduce": 9}, "result_bytes": {"all-reduce": 512}}
+    assert diff_fingerprint("a", "1x1", fp, fp) == ""
+    drift = {"counts": {"all-reduce": 10},
+             "result_bytes": {"all-reduce": 512}}
+    d = diff_fingerprint("a", "2x4", fp, drift)
+    assert "all-reduce" in d and "drift" in d
+    assert "no golden" in diff_fingerprint("a", "2x4", fp, None)
+
+
+# --------------------------------------------------- Pass B: lint fixtures
+FIXTURE_KW = dict(roots=(("Engine", "step"),),
+                  retire={("Engine", "_retire")}, oracle=set(),
+                  attr_classes={"runner": "ModelRunner"})
+
+GOOD_SRC = '''\
+import numpy as np
+
+def log_d2h(log, elems, dtype, tag):
+    log.append((elems, dtype, tag))
+
+class ModelRunner:
+    def fetch(self, h):
+        x = np.asarray(h)  # hotpath: sync-ok (test fixture)
+        log_d2h([], 1, "int32", "step")
+        return x
+
+class Engine:
+    def step(self):
+        self._schedule()
+        self.runner.fetch(None)
+        self._retire()
+
+    def _schedule(self):
+        return np.array([1, 2])
+
+    def _retire(self):
+        return np.asarray([1]).item()
+
+    def _never_called(self):
+        return np.asarray([2])
+'''
+
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(src)
+    return str(p)
+
+
+def test_lint_fixture_clean(tmp_path):
+    vs = lint_files([_write(tmp_path, "good.py", GOOD_SRC)],
+                    **FIXTURE_KW)
+    assert vs == []
+
+
+def test_lint_hot_sync_fires(tmp_path):
+    src = GOOD_SRC.replace("return np.array([1, 2])",
+                           "return np.asarray([1, 2])")
+    vs = lint_files([_write(tmp_path, "bad.py", src)], **FIXTURE_KW)
+    assert [v.rule for v in vs] == ["hot-sync"]
+    assert "_schedule" in vs[0].message
+
+
+def test_lint_item_and_device_get_and_block(tmp_path):
+    src = GOOD_SRC.replace(
+        "return np.array([1, 2])",
+        "import jax\n"
+        "        jax.device_get(1)\n"
+        "        x = np.float32(3); x.item()\n"
+        "        return x.block_until_ready()")
+    vs = lint_files([_write(tmp_path, "bad.py", src)], **FIXTURE_KW)
+    assert sorted(v.rule for v in vs) == ["hot-sync"] * 3
+
+
+def test_lint_annotated_but_unlogged(tmp_path):
+    src = GOOD_SRC.replace('        log_d2h([], 1, "int32", "step")\n',
+                           "")
+    vs = lint_files([_write(tmp_path, "bad.py", src)], **FIXTURE_KW)
+    assert [v.rule for v in vs] == ["sync-unlogged"]
+
+
+def test_lint_jnp_outside_jit(tmp_path):
+    src = GOOD_SRC.replace(
+        "return np.array([1, 2])",
+        "import jax.numpy as jnp\n"
+        "        jnp.asarray([1])\n"          # allowlisted: H2D staging
+        "        return jnp.zeros((2,))")     # eager dispatch: fires
+    vs = lint_files([_write(tmp_path, "bad.py", src)], **FIXTURE_KW)
+    assert [v.rule for v in vs] == ["jnp-outside-jit"]
+    assert "zeros" in vs[0].message
+
+
+def test_lint_jnp_inside_jit_allowed(tmp_path):
+    src = GOOD_SRC + '''
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+@partial(jax.jit, static_argnums=0)
+def _impl(n, x):
+    return jnp.zeros((n,)) + x
+'''
+    assert lint_files([_write(tmp_path, "f.py", src)],
+                      **FIXTURE_KW) == []
+
+
+def test_lint_time_in_jit(tmp_path):
+    src = GOOD_SRC + '''
+import time
+import jax
+from functools import partial
+
+def fine():
+    return time.time()
+
+@partial(jax.jit, static_argnums=0)
+def _impl(n, x):
+    return x * time.time()
+'''
+    vs = lint_files([_write(tmp_path, "f.py", src)], **FIXTURE_KW)
+    assert [v.rule for v in vs] == ["time-in-jit"]
+    assert "_impl" in vs[0].message
+
+
+def test_lint_phase_table_honesty(tmp_path):
+    vs = lint_files([_write(tmp_path, "good.py", GOOD_SRC)],
+                    roots=(("Engine", "step"),),
+                    retire={("Engine", "_retire"),
+                            ("Engine", "_gone_with_refactor")},
+                    oracle=set(),
+                    attr_classes={"runner": "ModelRunner"})
+    assert [v.rule for v in vs] == ["phase-table"]
+    assert "_gone_with_refactor" in vs[0].message
+
+
+def test_lint_kernels_checked_even_unreachable(tmp_path):
+    kernel = ("import numpy as np\n"
+              "def _kernel_body(x):\n"
+              "    return np.asarray(x)\n")
+    vs = lint_files([_write(tmp_path, "good.py", GOOD_SRC)],
+                    kernel_paths=(_write(tmp_path, "k.py", kernel),),
+                    **FIXTURE_KW)
+    assert [v.rule for v in vs] == ["hot-sync"]
+    assert "_kernel_body" in vs[0].message
+
+
+# ------------------------------------------------------- the real tree
+def test_real_tree_lints_clean():
+    assert lint_tree(SRC_ROOT) == []
+
+
+def test_goldens_checked_in_for_every_config_and_mesh():
+    from repro.configs import all_configs
+    for arch in sorted(all_configs()):
+        for mesh in MESHES:
+            p = golden_path(arch, mesh)
+            assert os.path.exists(p), f"missing golden {p}"
+            with open(p) as f:
+                g = json.load(f)
+            assert g["arch"] == arch and g["mesh"] == mesh
+            assert set(g) >= {"counts", "result_bytes"}
+            if mesh == "1x1":
+                # single device: no collectives, ever
+                assert g["counts"] == {}
+
+
+def test_real_step_audit_single_device():
+    """End-to-end Pass A on one config against the checked-in golden:
+    compiles the production mixed step (~40 s)."""
+    from repro.analysis.step_audit import audit_config
+    res = audit_config("granite-3.2-8b", "1x1")
+    assert res.violations == []
+    assert res.fingerprint_diff == ""
+    assert res.ok
+    assert res.sync_async_identical
+    assert res.donated == ["k_pool", "tok_buf", "v_pool"]
+    assert res.fingerprint["counts"] == {}
+    if res.memory:
+        # the donated pools dominate: donation saved that much HBM
+        assert res.memory["alias_size_bytes"] > 0
+        assert res.memory["alias_size_bytes"] <= \
+            res.memory["output_size_bytes"]
+
+
+# ---------------------------------------------------------------- CLI
+def test_cli_lint_clean_tree_exit0(capsys):
+    from repro.analysis.__main__ import main
+    assert main(["--skip-audit"]) == 0
+    assert "0 violation(s)" in capsys.readouterr().out
+
+
+def test_cli_lint_violation_exit1(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = GOOD_SRC.replace("return np.array([1, 2])",
+                           "return np.asarray([1, 2])")
+    rc = main(["--skip-audit", "--lint-paths",
+               _write(tmp_path, "bad.py", bad)])
+    assert rc == 1
+    assert "hot-sync" in capsys.readouterr().err
+
+
+def test_cli_audit_failure_exit1_and_artifacts(tmp_path, monkeypatch,
+                                               capsys):
+    """Exit-code + artifact contract of the audit leg, with the compile
+    stubbed out (each real rule class is covered above)."""
+    import repro.analysis.step_audit as sa
+    from repro.analysis.__main__ import main
+    from repro.analysis.step_audit import AuditResult
+
+    def fake_audit_all(archs, meshes, update_goldens=False,
+                       progress=None):
+        bad = AuditResult(arch="granite-3.2-8b", mesh="2x4")
+        bad.violations = ["donation: pool output #0 (k_pool) is not in "
+                          "input_output_alias"]
+        bad.fingerprint_diff = "granite-3.2-8b [2x4]: drift\n"
+        return [AuditResult(arch="granite-3.2-8b", mesh="1x1"), bad]
+
+    monkeypatch.setattr(sa, "audit_all", fake_audit_all)
+    rc = main(["--skip-lint", "--out", str(tmp_path)])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "donation" in err and "drift" in err
+    with open(tmp_path / "analysis_audit.jsonl") as f:
+        recs = [json.loads(line) for line in f]
+    assert [r["ok"] for r in recs] == [True, False]
+    assert (tmp_path / "analysis_fingerprint_diff.txt").exists()
+
+
+def test_cli_audit_ok_exit0(tmp_path, monkeypatch):
+    import repro.analysis.step_audit as sa
+    from repro.analysis.__main__ import main
+    from repro.analysis.step_audit import AuditResult
+
+    monkeypatch.setattr(
+        sa, "audit_all",
+        lambda *a, **k: [AuditResult(arch="x", mesh="1x1")])
+    assert main(["--skip-lint", "--out", str(tmp_path)]) == 0
+    assert not (tmp_path / "analysis_fingerprint_diff.txt").exists()
