@@ -26,6 +26,16 @@ meshes time collective overhead, real TP speedups need real chips.
 Appends one record per run to ``results/sharded_step.jsonl`` for
 ``benchmarks/report.py``.
 
+``--data-shard`` (with ``--mesh data=D,...``, D>1) turns on data-
+parallel token sharding for the sharded leg
+(``EngineConfig.data_shard_tokens``): the packed token axis of the
+mixed step splits over the D data devices instead of every device
+redundantly computing the full batch.  Without the flag the sharded leg
+pins ``data_shard_tokens=False`` (the replicate-everything TP layout) —
+the two runs are the A/B for the token-sharding change, and both assert
+the same invariants (token identity with the single-device run, 1.0
+device-calls/step, zero post-warmup recompiles).
+
 ``--async`` adds an async-submission leg (``EngineConfig.
 async_submission``, the schedule → submit → retire pipeline): the same
 workload with one-step-lookahead submission, asserting the async
@@ -103,7 +113,10 @@ def _workload(eng, seed: int, concurrency: int, prompt_len: int,
 
 
 def run(arch: str = "granite-3.2-8b", smoke: bool = False,
-        mesh: dict | None = None, async_leg: bool = False):
+        mesh: dict | None = None, async_leg: bool = False,
+        data_shard: bool = False):
+    if data_shard and (mesh is None or mesh.get("data", 1) < 2):
+        raise SystemExit("--data-shard needs --mesh data=D,... with D>1")
     concurrency = 3 if smoke else CONCURRENCY
     prompt_len = 24 if smoke else PROMPT_LEN
     gen_len = 8 if smoke else GEN_LEN
@@ -122,6 +135,7 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
         if mode == "mixed_sharded":
             from repro.launch.mesh import make_host_mesh
             ecfg_kw["mesh"] = make_host_mesh(**mesh)
+            ecfg_kw["data_shard_tokens"] = data_shard
         elif mode == "mixed_async":
             pass                            # defaults: mixed + async on
         else:
@@ -141,9 +155,11 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
         if mode == "mixed":
             mixed_tokens = out
             baseline_us = float(np.mean(times)) * 1e6
-        # keep emit()'s CSV name comma-free: 2x4 = (data=2, model=4)
+        # keep emit()'s CSV name comma-free: 2x4 = (data=2, model=4);
+        # "+ds" marks the token-sharded (data-parallel) flavor
         tag = mode if mesh is None or mode != "mixed_sharded" else \
-            f"mixed@{mesh['data']}x{mesh['model']}"
+            f"mixed@{mesh['data']}x{mesh['model']}" \
+            + ("+ds" if data_shard else "")
         if mode != "sequential" and not eng.cfg.is_encoder_decoder:
             # the unified-step invariant: one jitted call per work step
             assert calls == steps, (calls, steps)
@@ -205,6 +221,7 @@ def run(arch: str = "granite-3.2-8b", smoke: bool = False,
             os.makedirs(RESULTS, exist_ok=True)
             rec = dict(arch=arch, smoke=smoke,
                        mesh=f"{mesh['data']}x{mesh['model']}",
+                       data_shard=data_shard,
                        step_latency_us=sharded_us,
                        baseline_us=baseline_us,
                        assembly_us_per_step=t_asm / max(steps, 1) * 1e6,
@@ -231,7 +248,13 @@ if __name__ == "__main__":
                          "e.g. 'model=4' or 'data=2,model=4' (needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
+    ap.add_argument("--data-shard", dest="data_shard",
+                    action="store_true",
+                    help="shard the packed token axis over the mesh "
+                         "data axis in the sharded leg (needs --mesh "
+                         "data=D,... with D>1); off = replicate-"
+                         "everything TP baseline")
     args = ap.parse_args()
     run(arch=args.arch, smoke=args.smoke,
         mesh=parse_mesh(args.mesh) if args.mesh else None,
-        async_leg=args.async_leg)
+        async_leg=args.async_leg, data_shard=args.data_shard)

@@ -1,0 +1,164 @@
+"""Multi-replica router — cache-affinity placement vs round_robin.
+
+The multi-turn agentic trace the paper's pipelines model (base → aLoRA
+turns over a growing conversation prefix) is exactly the workload where
+PLACEMENT decides the prefix-cache hit rate: turn k+1's prompt extends
+turn k's full sequence, so its leading blocks are cached — but only on
+the replica that served turn k.  ``serving.router.Router`` scores every
+admission with the same aLoRA-aligned chained block hashes the cache
+matches on (``Engine.cached_prefix_tokens``, non-acquiring), so later
+turns follow their prefix; ``round_robin`` sprays turns across the
+fleet and re-prefills prefixes some other replica already holds.
+
+For each fleet size R (1, 2, 4; smoke: 1, 2) this runs the SAME
+multi-session multi-adapter trace under both policies and reports, per
+policy:
+
+* fleet prefix-cache hit rate (summed hits / summed lookups over every
+  replica — the headline number; affinity must beat round_robin for
+  R > 1, asserted),
+* fleet tokens/s through ``metrics_for`` → ``merge_aggregates`` (the
+  union makespan: overlapped replica wall-clock counted ONCE — replica
+  virtual clocks advance independently, so the fleet models R engines
+  stepping concurrently),
+* a per-replica row (requests served, hit rate, tok/s) + the fleet row.
+
+R=1 is the degenerate sanity leg: both policies collapse to the single
+engine and must match its hit rate exactly.  Appends one record per
+(R, policy) to ``results/router.jsonl`` for ``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, make_engine, model, stage_row
+from repro.serving import EngineConfig
+from repro.serving.router import Router
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# session counts are COPRIME to every fleet size: with sessions % R == 0
+# a round_robin pointer that cycles straight through each round would
+# map every session back to the replica that served its previous turn —
+# accidental perfect affinity, and the policy contrast measures nothing.
+# An odd count makes the blind mapping drift one replica per round, the
+# honest baseline behavior (real traces have no such alignment either).
+SESSIONS = 9
+TURNS = 3
+BASE_PROMPT = 40
+TURN_TOKENS = 24
+GEN_LEN = 8
+
+
+def _mk_router(n: int, policy: str, arch: str) -> Router:
+    # identical construction per replica (same cached params + adapter
+    # weights, fresh pools) — registration order matches, so the uid
+    # every block hash salts on agrees across the fleet
+    ecfg = EngineConfig(max_running=4, max_batched_tokens=64,
+                        adapter_slots=2)
+    return Router([make_engine("alora", n_adapters=2, ecfg=ecfg,
+                               arch=arch) for _ in range(n)],
+                  policy=policy)
+
+
+def _run_trace(router: Router, arch: str, seed: int,
+               sessions: int, turns: int):
+    """Drive the multi-turn trace; returns every router-global req id.
+
+    Turn k+1 extends turn k's prompt + generated tokens (the agentic
+    shape from ``serving/pipelines.py``), alternating base and aLoRA
+    turns per session.  No ``session=`` pinning — placement quality
+    must come from the locality SCORE alone, which is the policy
+    contrast this benchmark exists to measure.
+    """
+    cfg, _ = model(arch)
+    rng = np.random.RandomState(seed)
+    hi = min(400, cfg.vocab_size)
+    convo = [list(rng.randint(10, hi, BASE_PROMPT + 4 * (s % 3)))
+             for s in range(sessions)]
+    gids = []
+    for t in range(turns):
+        round_ids = []
+        for s in range(sessions):
+            adapter = f"ad{s % 2}" if t % 2 else None
+            round_ids.append(router.submit(convo[s], GEN_LEN,
+                                           adapter_name=adapter))
+        router.run_until_idle()
+        for s, gid in enumerate(round_ids):
+            out = router.request(gid).output_tokens
+            assert len(out) == GEN_LEN, (s, out)
+            convo[s] = convo[s] + list(out) \
+                + list(rng.randint(10, hi, TURN_TOKENS))
+        gids.extend(round_ids)
+    return gids
+
+
+def run(arch: str = "granite-3.2-8b", smoke: bool = False):
+    fleet_sizes = (1, 2) if smoke else (1, 2, 4)
+    sessions = 5 if smoke else SESSIONS
+    turns = 2 if smoke else TURNS
+    hit_rates: dict = {}
+    for n in fleet_sizes:
+        for policy in ("affinity", "round_robin"):
+            for seed in (999, 7):                 # warmup + measured
+                router = _mk_router(n, policy, arch)
+                gids = _run_trace(router, arch, seed, sessions, turns)
+            fleet = router.metrics_for(gids)
+            per = router.per_replica_metrics(gids)
+            hit = router.kv_hit_rate()
+            hit_rates[(n, policy)] = hit
+            tag = f"R{n}/{policy}"
+            emit(f"router/{arch}/{tag}/fleet_hit_rate", hit * 100,
+                 f"hits/lookups across {n} replica(s); "
+                 f"{len(gids)} requests")
+            emit(f"router/{arch}/{tag}/fleet_tok_per_s",
+                 fleet.throughput_tok_per_s,
+                 f"union-makespan throughput; {stage_row(fleet)}")
+            for idx, agg in sorted(per.items()):
+                eng = router.replicas[idx]
+                emit(f"router/{arch}/{tag}/replica{idx}",
+                     agg.throughput_tok_per_s,
+                     f"n={agg.n} hit={eng.kv_hit_rate():.2f} "
+                     f"{stage_row(agg)}")
+            os.makedirs(RESULTS, exist_ok=True)
+            rec = dict(arch=arch, smoke=smoke, replicas=n, policy=policy,
+                       fleet_hit_rate=hit,
+                       fleet_tok_per_s=fleet.throughput_tok_per_s,
+                       mean_ttft_s=fleet.means.get("ttft"),
+                       n_requests=len(gids),
+                       per_replica_n=[per[i].n if i in per else 0
+                                      for i in range(n)],
+                       reroutes=router.reroutes)
+            with open(os.path.join(RESULTS, "router.jsonl"), "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        # R=1: both policies ARE the single engine — identical trace,
+        # identical placement, identical hit rate
+        if n == 1:
+            a, rr = hit_rates[(1, "affinity")], hit_rates[(1,
+                                                           "round_robin")]
+            assert abs(a - rr) < 1e-12, (a, rr)
+        else:
+            # the routing win this benchmark exists to show: locality
+            # scoring must strictly beat blind placement on a multi-turn
+            # trace (round_robin re-prefills prefixes another replica
+            # already cached)
+            a, rr = hit_rates[(n, "affinity")], hit_rates[(n,
+                                                           "round_robin")]
+            assert a > rr, \
+                f"R={n}: affinity hit rate {a:.3f} <= round_robin {rr:.3f}"
+            emit(f"router/{arch}/R{n}/affinity_vs_round_robin",
+                 (a / rr if rr else float("inf")) * 100,
+                 f"hit-rate ratio: affinity={a:.3f} round_robin={rr:.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3.2-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="R∈{1,2}, fewer sessions/turns for CI")
+    args = ap.parse_args()
+    run(arch=args.arch, smoke=args.smoke)

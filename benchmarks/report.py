@@ -122,20 +122,42 @@ def sharded_step_table(recs):
     baseline of the same invocation; on host meshes the ratio gauges
     collective overhead, not TP speedup."""
     print("\n### Sharded mixed step — host-mesh runs\n")
-    print("| arch | mesh (data×model) | step (us) | single-dev (us) | "
-          "ratio | assembly (us) | calls/step | recompiles |")
-    print("|---|---|---|---|---|---|---|---|")
+    print("| arch | mesh (data×model) | tok-shard | step (us) | "
+          "single-dev (us) | ratio | assembly (us) | calls/step | "
+          "recompiles |")
+    print("|---|---|---|---|---|---|---|---|---|")
     for r in recs:
         ratio = r["step_latency_us"] / r["baseline_us"] \
             if r.get("baseline_us") and r.get("step_latency_us") \
             is not None else float("nan")
         print(f"| {r['arch']} | {r['mesh']} | "
+              f"{'✓' if r.get('data_shard') else '—'} | "
               f"{fmt(r.get('step_latency_us'), '.0f')} | "
               f"{fmt(r.get('baseline_us'), '.0f')} | "
               f"{fmt(ratio)}× | "
               f"{fmt(r.get('assembly_us_per_step'), '.0f')} | "
               f"{fmt(r.get('device_calls_per_step'))} | "
               f"{r['recompiles_after_warmup']} |")
+
+
+def router_table(recs):
+    """Multi-replica router runs (``bench_router.py`` appends one record
+    per replicas × policy).  Fleet throughput uses the merged makespan
+    (overlapped replica wall-clock counted once); the hit rate is the
+    fleet's summed hits over summed lookups.  The affinity-vs-
+    round_robin contrast at the same R is the routing win."""
+    print("\n### Multi-replica router — affinity vs round_robin\n")
+    print("| arch | R | policy | fleet hit rate | fleet tok/s | "
+          "mean ttft (s) | per-replica n | reroutes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["replicas"],
+                                         r["policy"])):
+        per_n = "/".join(str(n) for n in r.get("per_replica_n", []))
+        print(f"| {r['arch']} | {r['replicas']} | {r['policy']} | "
+              f"{fmt(r.get('fleet_hit_rate'))} | "
+              f"{fmt(r.get('fleet_tok_per_s'), '.0f')} | "
+              f"{fmt(r.get('mean_ttft_s'), '.4f')} | {per_n or '—'} | "
+              f"{r.get('reroutes', 0)} |")
 
 
 def audit_table(recs):
@@ -190,11 +212,22 @@ def main():
         adapter_pool_table(list(latest.values()))
     sharded = load(os.path.join(BASE, "sharded_step.jsonl"))
     if sharded:
-        # append-mode artifact: last record per (arch, mesh, smoke) wins
+        # append-mode artifact: last record per
+        # (arch, mesh, smoke, data_shard) wins
         latest = {}
         for r in sharded:
-            latest[(r["arch"], r["mesh"], r["smoke"])] = r
+            latest[(r["arch"], r["mesh"], r["smoke"],
+                    r.get("data_shard", False))] = r
         sharded_step_table(list(latest.values()))
+    router = load(os.path.join(BASE, "router.jsonl"))
+    if router:
+        # append-mode artifact: last record per
+        # (arch, replicas, policy, smoke) wins
+        latest = {}
+        for r in router:
+            latest[(r["arch"], r["replicas"], r["policy"],
+                    r["smoke"])] = r
+        router_table(list(latest.values()))
     audit = load(os.path.join(BASE, "analysis_audit.jsonl"))
     if audit:
         # append-mode artifact: last record per (arch, mesh) wins

@@ -72,8 +72,25 @@ ATTR_CLASSES: Dict[str, str] = {
     "runner": "ModelRunner",
     "adapter_pool": "AdapterPool",
     "host_bufs": "HostBufferPool",
+    "cache": "PrefixCache",
 }
-ROOTS: Tuple[Tuple[str, str], ...] = (("Engine", "step"),)
+# Router.submit is the multi-replica ADMIT path: every placement probes
+# N replicas (prefix-cache walk + residency snapshot + load read), so a
+# hidden device sync there would multiply by the fleet size per request.
+# Router.step fans one fleet step out over every live replica — it rides
+# the same no-sync budget as Engine.step, whose graph it contains.  The
+# router reaches the replica-surface probes through local variables the
+# intraprocedural resolver cannot follow, so those probes are rooted
+# explicitly alongside Engine.submit (which Router.submit delegates to).
+ROOTS: Tuple[Tuple[str, str], ...] = (
+    ("Engine", "step"),
+    ("Router", "submit"),
+    ("Router", "step"),
+    ("Engine", "submit"),
+    ("Engine", "cached_prefix_tokens"),
+    ("Engine", "outstanding_tokens"),
+    ("Engine", "adapter_residency"),
+)
 
 
 @dataclass(frozen=True)

@@ -168,7 +168,8 @@ class ModelConfig:
         d = self.d_model
         d_inner = s.expand * d
         nheads = d_inner // s.head_dim
-        # in_proj -> [z, x, B, C, dt]
+        # split input projection in_z/in_xbc/in_dt -> [z | xBC | dt]
+        # (same total as the former fused in_proj matrix)
         in_proj = d * (2 * d_inner + 2 * s.ngroups * s.state_dim + nheads)
         conv = s.conv_width * (d_inner + 2 * s.ngroups * s.state_dim)
         out_proj = d_inner * d

@@ -3,8 +3,10 @@
 Adapter weights mirror the model's segment stacking
 (``repro.models.model.period_segments``): for each attention segment a
 pytree {"aq","bq","ak","bk","av","bv"} with leading (repeats, count)
-layer dims; for each SSM segment {"a","b"} targeting ``in_proj`` (the
-beyond-paper SSM extension).  ``stack_adapters`` inserts the **zero
+layer dims; for each SSM segment {"a","b"} targeting the SSM input
+projection — B spans the full fused [z|xBC|dt] in_dim and the delta is
+sliced onto the split in_z/in_xbc/in_dt matmuls (the beyond-paper SSM
+extension).  ``stack_adapters`` inserts the **zero
 adapter at index 0** and stacks the active set along a new adapter axis —
 the layout consumed by ``repro.models.layers.lora_delta``.
 

@@ -87,6 +87,34 @@ class PrefixCache:
                            state_slot=state_slot, hashes=hashes)
 
     # ------------------------------------------------------------------
+    def probe(self, tokens: Sequence[int], adapter: Optional[AdapterKey],
+              salt: tuple = ()) -> int:
+        """Non-acquiring locality probe: the reusable prefix length (in
+        tokens) ``match_and_acquire`` WOULD return for this request,
+        without touching refcounts or the hit/miss counters.  This is the
+        serving router's placement primitive — it may probe every replica
+        per admission, so the probe must not perturb cache state or skew
+        the hit-rate statistics the benchmarks report.
+        """
+        bs = self.block_size
+        hashes = request_block_hashes(tokens, bs, adapter, salt)
+        kv_depth = 0
+        if self.kv is not None:
+            for h in hashes:
+                if self.kv.lookup(h) is None:
+                    break
+                kv_depth += 1
+        else:
+            kv_depth = len(hashes)
+        if self.state is not None:
+            # reuse boundary needs a state snapshot at/below KV coverage
+            for i in range(kv_depth, 0, -1):
+                if self.state.lookup(hashes[i - 1]) is not None:
+                    return i * bs
+            return 0
+        return kv_depth * bs
+
+    # ------------------------------------------------------------------
     def register_kv_block(self, h: BlockHash, bid: int) -> int:
         """Register a just-filled KV block; returns canonical block id."""
         assert self.kv is not None

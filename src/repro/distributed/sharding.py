@@ -7,9 +7,11 @@ Conventions (Megatron-style TP over ``model``, DP over ``pod``+``data``):
 * MLP: up/gate column-parallel, down row-parallel;
 * MoE: experts sharded over ``model`` (expert parallelism; the shard_map
   dispatch in ``repro.models.moe`` gathers locally and psums);
-* SSM: in_proj column-parallel over the fused [z,x,B,C,dt] dim (XLA
-  reshards the component slices; splitting the fused matrix is a §Perf
-  candidate), out_proj row-parallel;
+* SSM: the input projection is split per consumer slice — in_z / in_xbc
+  / in_dt each column-parallel on its own output dim, so z, the fused
+  xBC conv block and dt land already aligned with their consumers (the
+  former fused in_proj forced GSPMD to reshard every slice);
+  out_proj row-parallel;
 * embeddings / unembedding vocab-sharded (vocabs padded to %512);
 * KV caches: kv-head-sharded when num_kv_heads % model_size == 0, else
   head-dim-sharded (head_dim of every assigned arch divides 16);
@@ -133,7 +135,8 @@ def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
         return P(model, None)
     if name in ("unembed",):
         return P(None, model)
-    if name in ("wq", "wk", "wv", "w_up", "w_gate", "in_proj"):
+    if name in ("wq", "wk", "wv", "w_up", "w_gate",
+                "in_z", "in_xbc", "in_dt"):
         if core == 3:                       # MoE expert stacks (E, d, ff)
             return spec(model, None, None)
         return spec(None, model)
@@ -321,8 +324,18 @@ class StepShardings:
     # (MR,) per-run-slot last-sampled-token buffer AND the (Rb,) sampled
     # ids — replicated: the step's argmax all-gathers once at the
     # unembed, then every shard keeps the full int32 buffer so the next
-    # step's from_buf token gathers need no collective
+    # step's from_buf token gathers stay collective-free
     tok_buf: P = P()
+    # (Tb,) per-token metadata rows / (Tb, d) input embeds.  P() (the
+    # TP-only layout) replicates the packed token axis on every device;
+    # data-parallel token sharding sets these to P(data) / P(data, None)
+    # so each data shard holds only its slice of the step's tokens and
+    # ``max_batched_tokens`` scales with the data axis.  Per-REQUEST
+    # arrays (block tables, out_rows, run_slots) and the sampled ids
+    # stay replicated — retirement and the next step's from_buf gathers
+    # still see every request on every shard.
+    tok_meta: P = P()
+    tok_embeds: P = P()
     replicated: P = P()
 
     def named(self, spec: P) -> NamedSharding:
@@ -335,7 +348,8 @@ class StepShardings:
 
 
 def mixed_step_shardings(cfg: ModelConfig, mesh: MeshLike,
-                         model_axis: str = "model") -> StepShardings:
+                         model_axis: str = "model",
+                         data_axis: Optional[str] = None) -> StepShardings:
     """Layouts for the paged serving pools over ``mesh``.
 
     The K/V pool follows the same head-vs-head_dim rule as
@@ -343,15 +357,25 @@ def mixed_step_shardings(cfg: ModelConfig, mesh: MeshLike,
     divide the model axis); SSM pools shard their head / channel dims
     when divisible, else replicate.  (Property tests pass a plain
     ``{axis: size}`` mapping; the serving runner passes the real mesh.)
+
+    ``data_axis`` (when present in the mesh with size > 1) additionally
+    shards the packed TOKEN axis of the mixed step over that axis:
+    per-token metadata rows and input embeds split so each data shard
+    computes only its slice of the step's tokens (the runner pads the
+    token bucket to a multiple of the axis size).  Per-request arrays,
+    the token buffer and the sampled ids stay replicated.
     """
-    ms = _axis_sizes(mesh)[model_axis]
+    sizes = _axis_sizes(mesh)
+    ms = sizes[model_axis]
+    tok_ax = data_axis if data_axis is not None \
+        and sizes.get(data_axis, 1) > 1 else None
     if _kv_on_heads(cfg, ms):
         kv = P(None, None, None, model_axis, None)
-        attn_out = P(None, model_axis, None)
+        attn_out = P(tok_ax, model_axis, None)
     else:
         hd_ax = model_axis if cfg.head_dim % ms == 0 else None
         kv = P(None, None, None, None, hd_ax)
-        attn_out = P(None, None, hd_ax)
+        attn_out = P(tok_ax, None, hd_ax)
     ssm_pool = conv_pool = None
     if cfg.num_ssm_layers() > 0:
         from repro.models.ssm import ssm_dims
@@ -361,7 +385,8 @@ def mixed_step_shardings(cfg: ModelConfig, mesh: MeshLike,
         conv_pool = P(None, None, None,
                       model_axis if ch % ms == 0 else None)
     return StepShardings(mesh=mesh, kv_pool=kv, ssm_pool=ssm_pool,
-                         conv_pool=conv_pool, attn_out=attn_out)
+                         conv_pool=conv_pool, attn_out=attn_out,
+                         tok_meta=P(tok_ax), tok_embeds=P(tok_ax, None))
 
 
 def zero1_specs(param_spec_tree: Tree, params_shape: Tree, mesh: Mesh,

@@ -7,6 +7,14 @@ through the engine, and prints per-stage latency + cache-hit metrics.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3.2-8b \
       --requests 8 --prompt-len 128
+
+``--replicas N`` scales the same workload out over N in-process engine
+replicas behind the cache-affinity router (``serving/router.py``) —
+each replica gets its own pools, prefix cache and adapter slots, and
+every submission is placed by aLoRA-aligned prefix locality.
+``--route {affinity,round_robin}`` selects the placement policy
+(round_robin is the blind baseline); with ``--replicas 1`` the router
+tier is skipped entirely and the engine is driven directly.
 """
 from __future__ import annotations
 
@@ -21,10 +29,14 @@ from repro.core.alora import (PAPER_ALORA_RANK, PAPER_LORA_RANK,
 from repro.models import init_params
 from repro.serving import Engine, EngineConfig, speedup_table
 from repro.serving import pipelines as P
+from repro.serving.router import POLICIES, Router
 
 
 def build_engine(cfg, params, kind: str, n_adapters: int = 1,
-                 engine_cfg: EngineConfig = EngineConfig()) -> Engine:
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 replicas: int = 1, route: str = "affinity"):
+    """One engine, or — with ``replicas > 1`` — a Router over N
+    identically-built replicas (drop-in for the pipeline drivers)."""
     rank = PAPER_ALORA_RANK if kind == "alora" else PAPER_LORA_RANK
     adapters = []
     for i in range(n_adapters):
@@ -33,7 +45,14 @@ def build_engine(cfg, params, kind: str, n_adapters: int = 1,
                            invocation_tokens=inv)
         w = init_adapter_weights(jax.random.key(100 + i), cfg, rank)
         adapters.append((spec, w))
-    return Engine(cfg, params, adapters=adapters, engine_cfg=engine_cfg)
+
+    def mk() -> Engine:
+        return Engine(cfg, params, adapters=adapters,
+                      engine_cfg=engine_cfg)
+
+    if replicas <= 1:
+        return mk()
+    return Router([mk() for _ in range(replicas)], policy=route)
 
 
 def main() -> None:
@@ -44,10 +63,17 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--eval-len", type=int, default=16)
     ap.add_argument("--adapters", type=int, default=1)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the affinity router "
+                         "(1 = no router tier)")
+    ap.add_argument("--route", choices=POLICIES, default="affinity",
+                    help="placement policy with --replicas > 1")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
-    print(f"serving reduced {cfg.name} ({cfg.arch_type})")
+    tier = f" x{args.replicas} replicas ({args.route})" \
+        if args.replicas > 1 else ""
+    print(f"serving reduced {cfg.name} ({cfg.arch_type}){tier}")
     params = init_params(jax.random.key(0), cfg)
 
     results = {}
@@ -55,7 +81,8 @@ def main() -> None:
         # warmup pass compiles all jit buckets, then a fresh engine
         # measures with cold caches but warm code
         for seed in (123, 0):
-            eng = build_engine(cfg, params, kind, args.adapters)
+            eng = build_engine(cfg, params, kind, args.adapters,
+                               replicas=args.replicas, route=args.route)
             names = [f"intrinsic{i}" for i in range(args.adapters)]
             res = P.base_adapter(
                 eng, adapter_names=names, prompt_len=args.prompt_len,
@@ -69,6 +96,11 @@ def main() -> None:
                   f"prefill={m.means['prefill']:.4f}s "
                   f"decode={m.means['decode']:.3f}s "
                   f"hit={m.means['cache_hit_frac']:.2f}")
+        if isinstance(eng, Router):
+            per = [sum(1 for p in eng.placements if p.replica == i)
+                   for i in range(len(eng.replicas))]
+            print(f"  {kind:5s} fleet hit={eng.kv_hit_rate():.2f} "
+                  f"placements/replica={per}")
 
     sp = speedup_table(results["lora"][1].stage_metrics(
         results["lora"][0], "eval"),

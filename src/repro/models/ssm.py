@@ -38,13 +38,21 @@ def init_ssm(key, cfg: ModelConfig, dtype) -> Params:
     ks = jax.random.split(key, 5)
     std = 0.02
     out_std = 0.02 / math.sqrt(2 * cfg.num_layers)
-    in_dim = 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads
     # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
     dt = jnp.exp(jax.random.uniform(ks[3], (nheads,))
                  * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
     dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    # The input projection is SPLIT per consumer slice (z / xBC / dt)
+    # instead of one fused (d, 2*d_inner + 2*G*N + nheads) matrix: each
+    # factor is column-parallel on a dim its consumer reads contiguously,
+    # so TP shards never have to reshard the fused dim to recover the
+    # slices (the xBC block stays fused — the causal conv consumes it as
+    # one contiguous channel block).  Total parameter count is unchanged.
+    zk, xk, dk = jax.random.split(ks[0], 3)
     return {
-        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) * std).astype(dtype),
+        "in_z": (jax.random.normal(zk, (d, d_inner)) * std).astype(dtype),
+        "in_xbc": (jax.random.normal(xk, (d, conv_ch)) * std).astype(dtype),
+        "in_dt": (jax.random.normal(dk, (d, nheads)) * std).astype(dtype),
         "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch))
                    * std).astype(dtype),
         "conv_b": jnp.zeros((conv_ch,), dtype),
@@ -100,8 +108,10 @@ def ssd_forward(p: Params, cfg: ModelConfig, x: jax.Array,
     ssm_state (B, nh, N, P) fp32, conv_state (B, W-1, conv_ch)).
 
     ``alora`` ({"a": (n,d,r), "b": (n,r,in_dim)}) applies the paper's
-    activation-aware masked low-rank update to ``in_proj`` — the SSM
-    analogue of adapting the QKV projections: pre-activation tokens
+    activation-aware masked low-rank update to the input projection
+    (the fused [z|xBC|dt] delta, sliced onto the split in_z/in_xbc/in_dt
+    matmuls) — the SSM analogue of adapting the QKV projections:
+    pre-activation tokens
     (adapter index 0) produce *identical* recurrent state to the base
     model, which is what makes the beyond-paper SSM state-snapshot reuse
     sound (DESIGN.md §2).
@@ -123,13 +133,19 @@ def ssd_forward(p: Params, cfg: ModelConfig, x: jax.Array,
     hpg = nh // G                                          # heads per group
     Q = min(s.chunk_size, S)
 
-    zxbcdt = x @ p["in_proj"]
+    # split projections: each slice is its own column-parallel matmul
+    # (no fused dim for GSPMD to reshard); the adapter delta stays fused
+    # over [z|xBC|dt] — its B matrix targets the full in_dim — and is
+    # sliced to match
+    z = x @ p["in_z"]
+    xBC = x @ p["in_xbc"]
+    dt = x @ p["in_dt"]                                    # (B,S,nh)
     if alora is not None:
         from repro.models.layers import lora_delta
-        zxbcdt = zxbcdt + lora_delta(x, alora["a"], alora["b"], adapter_idx)
-    z = zxbcdt[..., :d_inner]
-    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
-    dt = zxbcdt[..., d_inner + conv_ch:]                   # (B,S,nh)
+        delta = lora_delta(x, alora["a"], alora["b"], adapter_idx)
+        z = z + delta[..., :d_inner]
+        xBC = xBC + delta[..., d_inner:d_inner + conv_ch]
+        dt = dt + delta[..., d_inner + conv_ch:]
 
     seq_valid = None
     if valid_len is not None:
@@ -246,8 +262,8 @@ def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
     last_rows: (R,) int32 — packed index of each request's final token
     row_slots: (R,) int32 — run slot per request row (scatter-back)
     impl:      "ref" (packed-axis jnp scan) | "pallas" | "pallas_interpret"
-    lora_impl/active_slots: grouped-LoRA delta selection for the in_proj
-               adapter update (``layers.lora_delta_dispatch``)
+    lora_impl/active_slots: grouped-LoRA delta selection for the input-
+               projection adapter update (``layers.lora_delta_dispatch``)
 
     Returns (y (T, d_model), new live_ssm, new live_conv,
              snap_ssm (Cb, nh, N, P) fp32, snap_conv (Cb, W-1, ch)).
@@ -259,15 +275,19 @@ def ssd_ragged_forward(p: Params, cfg: ModelConfig, x: jax.Array, *,
     hpg = nh // G
     W = s.conv_width
 
-    zxbcdt = x @ p["in_proj"]
+    # split projections (see ssd_forward): per-slice matmuls, fused
+    # adapter delta sliced to match
+    z = x @ p["in_z"]
+    xBC = x @ p["in_xbc"]
+    dtr = x @ p["in_dt"]                               # (T, nh)
     if alora is not None:
         from repro.models.layers import lora_delta_dispatch
-        zxbcdt = zxbcdt + lora_delta_dispatch(
+        delta = lora_delta_dispatch(
             x, alora["a"], alora["b"], adapter_idx, active_slots,
             impl=lora_impl)
-    z = zxbcdt[..., :d_inner]
-    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
-    dtr = zxbcdt[..., d_inner + conv_ch:]              # (T, nh)
+        z = z + delta[..., :d_inner]
+        xBC = xBC + delta[..., d_inner:d_inner + conv_ch]
+        dtr = dtr + delta[..., d_inner + conv_ch:]
 
     # ---- ragged causal conv -----------------------------------------------
     # Each token's W-wide window spans the previous raw inputs OF ITS OWN
@@ -359,14 +379,17 @@ def ssd_decode_step(p: Params, cfg: ModelConfig, x: jax.Array,
     hpg = nh // G
     W = s.conv_width
 
-    zxbcdt = x[:, 0] @ p["in_proj"]                        # (B, in_dim)
+    x0 = x[:, 0]
+    z = x0 @ p["in_z"]
+    xBC = x0 @ p["in_xbc"]
+    dt = x0 @ p["in_dt"]
     if alora is not None:
         from repro.models.layers import lora_delta
         idx = adapter_idx[:, 0] if adapter_idx.ndim == 2 else adapter_idx
-        zxbcdt = zxbcdt + lora_delta(x[:, 0], alora["a"], alora["b"], idx)
-    z = zxbcdt[..., :d_inner]
-    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
-    dt = zxbcdt[..., d_inner + conv_ch:]
+        delta = lora_delta(x0, alora["a"], alora["b"], idx)
+        z = z + delta[..., :d_inner]
+        xBC = xBC + delta[..., d_inner:d_inner + conv_ch]
+        dt = dt + delta[..., d_inner + conv_ch:]
 
     # conv ring: window = [conv_state, xBC]
     full = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,W,C)

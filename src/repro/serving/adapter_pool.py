@@ -321,6 +321,14 @@ class AdapterPool:
         return sum(1 for r in self._by_uid.values()
                    if r.slot is not None and r.pins > 0)
 
+    def residency(self) -> Dict[str, bool]:
+        """Name → device-resident (installed in a slot) snapshot.  The
+        serving router's adapter-affinity signal: routing a request to a
+        replica where its adapter is already installed skips the
+        eviction+install admission charge entirely."""
+        return {name: self._by_uid[uid].slot is not None
+                for name, uid in self._by_name.items()}
+
     def stats(self) -> AdapterPoolStats:
         return AdapterPoolStats(
             num_slots=self.num_slots,

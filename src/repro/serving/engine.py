@@ -49,7 +49,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.activation_mask import adapter_index_for_positions, find_invocation_start
 from repro.core.alora import AdapterSpec
-from repro.core.block_hash import block_extra, hash_block, request_block_hashes
+from repro.core.block_hash import (AdapterKey, block_extra, hash_block,
+                                   request_block_hashes)
 from repro.core.kv_manager import BlockManager, OutOfBlocks
 from repro.core.prefix_cache import PrefixCache
 from repro.models.model import Runtime
@@ -134,6 +135,15 @@ class EngineConfig:
     # execution_mode="mixed" and the jnp "ref" kernel impls (GSPMD
     # partitions them; Pallas kernels are single-device).
     mesh: Optional[jax.sharding.Mesh] = None
+    # With a mesh whose "data" axis has size > 1, additionally shard the
+    # PACKED TOKEN AXIS of the mixed step over that axis: per-token
+    # metadata rows and input embeds split across the data devices, so
+    # max_batched_tokens scales with the data-axis size instead of every
+    # device redundantly computing the full packed batch.  Per-request
+    # arrays and the sampled ids stay replicated (retirement and the next
+    # step's from_buf gathers read them whole).  False keeps the
+    # replicate-everything TP layout (the sharded≡unsharded A/B leg).
+    data_shard_tokens: bool = True
 
 
 class Engine:
@@ -178,6 +188,7 @@ class Engine:
             mixed_attn_impl=engine_cfg.mixed_attn_impl,
             mixed_ssd_impl=engine_cfg.mixed_ssd_impl,
             mixed_lora_impl=engine_cfg.mixed_lora_impl,
+            data_shard_tokens=engine_cfg.data_shard_tokens,
         )
         self.runner = ModelRunner(
             cfg, params, rcfg,
@@ -1038,3 +1049,61 @@ class Engine:
     def kv_hit_rate(self) -> float:
         mgr = self.kv_mgr or self.st_mgr
         return mgr.hit_rate()
+
+    # ------------------------------------------------------------------
+    # replica surface (serving/router.py): read-only placement probes a
+    # multi-replica router scores admissions with.  All host-side python
+    # over scheduler state — no device work, no cache/statistics mutation.
+    # ------------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """No live work anywhere in the pipeline (queued or admitted)."""
+        return not (self.pending or self.waiting or self.running)
+
+    def cached_prefix_tokens(self, prompt: Sequence[int],
+                             adapter_name: Optional[str] = None,
+                             salt: Tuple = ()) -> int:
+        """How many leading prompt tokens THIS replica's prefix cache
+        could serve, were the request admitted here — the same chained
+        base-aligned block hashes admission matches on (so aLoRA probes
+        transparently score blocks prefilled by the base model or sibling
+        adapters), walked with non-acquiring lookups: refcounts and the
+        hit/miss counters are untouched.
+        """
+        if self.cache is None:
+            return 0
+        prompt = list(map(int, prompt))
+        key: Optional[AdapterKey] = None
+        if adapter_name is not None:
+            pool = self.adapter_pool
+            if pool is None:
+                raise KeyError(adapter_name)
+            uid = pool.uid_of(adapter_name)
+            spec = pool.get(uid).spec
+            inv = 0
+            if spec.kind == "alora":
+                i = find_invocation_start(prompt, spec.invocation_tokens)
+                inv = len(prompt) if i is None else i
+            key = AdapterKey(uid, spec.kind, inv)
+        # match boundary mirrors admission: the last prompt token is
+        # always recomputed, so it can never be part of the reuse prefix
+        return self.cache.probe(prompt[:-1], key, salt)
+
+    def outstanding_tokens(self) -> int:
+        """Remaining work on this replica, in tokens: uncomputed prompt
+        plus ungenerated output over every queued + admitted request.
+        The router's least-loaded tiebreak."""
+        n = 0
+        for r in self.pending:
+            n += len(r.prompt) + r.max_new_tokens
+        for r in self.waiting:
+            n += len(r.prompt) + r.max_new_tokens
+        for r in self.running:
+            n += max(len(r.prompt) - r.n_computed, 0)
+            n += max(r.max_new_tokens - len(r.output_tokens), 0)
+        return n
+
+    def adapter_residency(self) -> Dict[str, bool]:
+        """Adapter name → device-resident (slot installed) snapshot."""
+        pool = self.adapter_pool
+        return {} if pool is None else pool.residency()

@@ -26,6 +26,17 @@ class MetricsAggregate:
     # request lifetimes double-counts wall-clock and underreports the
     # real rate whenever requests run concurrently.
     tok_per_req_s: float = 0.0
+    # extensive totals + wall-clock endpoints, kept so aggregates MERGE
+    # without double-counting overlapped wall-clock: the multi-replica
+    # router's replicas run concurrently, so fleet throughput is
+    # Σ tokens / (max done − min arrival) over the union — NEVER a sum
+    # (or mean) of per-replica throughputs, which would count the same
+    # wall-clock interval once per replica.  NaN endpoints mean the
+    # source metrics carried no arrival/done timestamps.
+    total_tokens: int = 0
+    total_e2e: float = 0.0
+    t_min_arrival: float = float("nan")
+    t_max_done: float = float("nan")
 
     def row(self, keys: Iterable[str] = METRIC_KEYS) -> Dict[str, float]:
         """Means per metric key; an empty aggregate yields NaNs (never a
@@ -48,17 +59,69 @@ def aggregate(metrics: List[dict]) -> MetricsAggregate:
     # wall-clock throughput over the batch's makespan; requests recorded
     # without endpoints (hand-built dicts) fall back to the per-request
     # rate rather than inventing a wall-clock
+    t_lo = t_hi = float("nan")
     if all(m.get("arrival") is not None and m.get("done") is not None
            for m in metrics):
-        makespan = max(m["done"] for m in metrics) \
-            - min(m["arrival"] for m in metrics)
+        t_lo = min(m["arrival"] for m in metrics)
+        t_hi = max(m["done"] for m in metrics)
+        makespan = t_hi - t_lo
         throughput = total_tokens / makespan if makespan > 0 \
             else tok_per_req
     else:
         throughput = tok_per_req
     return MetricsAggregate(
         n=len(metrics), means=means, p50=p50, p99=p99,
-        throughput_tok_per_s=throughput, tok_per_req_s=tok_per_req)
+        throughput_tok_per_s=throughput, tok_per_req_s=tok_per_req,
+        total_tokens=total_tokens, total_e2e=total_e2e,
+        t_min_arrival=t_lo, t_max_done=t_hi)
+
+
+def merge_aggregates(parts: List[MetricsAggregate]) -> MetricsAggregate:
+    """Merge per-replica aggregates into one fleet aggregate.
+
+    Replicas run CONCURRENTLY, so the fleet's wall-clock throughput is
+    the union's Σ tokens over the union's makespan (earliest arrival →
+    latest done across every part) — summing or averaging per-replica
+    throughputs would count overlapped wall-clock once per replica and
+    overstate the fleet rate.  Means merge exactly (n-weighted);
+    percentiles merge as n-weighted means of the per-part percentiles —
+    an APPROXIMATION (exact fleet percentiles need the raw per-request
+    rows, which per-replica aggregates have already reduced away) that
+    is exact when the parts are identically distributed.
+    """
+    parts = [p for p in parts if p.n]
+    if not parts:
+        return MetricsAggregate(0, {}, {}, {}, 0.0)
+    if len(parts) == 1:
+        return parts[0]
+    n = sum(p.n for p in parts)
+
+    def wmean(dicts: List[Dict[str, float]]) -> Dict[str, float]:
+        keys = set().union(*dicts)
+        return {k: sum(d.get(k, 0.0) * p.n for d, p in zip(dicts, parts))
+                / n for k in keys}
+
+    total_tokens = sum(p.total_tokens for p in parts)
+    total_e2e = sum(p.total_e2e for p in parts)
+    tok_per_req = total_tokens / total_e2e if total_e2e else 0.0
+    arrivals = [p.t_min_arrival for p in parts]
+    dones = [p.t_max_done for p in parts]
+    t_lo = t_hi = float("nan")
+    if not any(np.isnan(arrivals)) and not any(np.isnan(dones)):
+        t_lo, t_hi = min(arrivals), max(dones)
+        makespan = t_hi - t_lo
+        throughput = total_tokens / makespan if makespan > 0 \
+            else tok_per_req
+    else:
+        throughput = tok_per_req
+    return MetricsAggregate(
+        n=n,
+        means=wmean([p.means for p in parts]),
+        p50=wmean([p.p50 for p in parts]),
+        p99=wmean([p.p99 for p in parts]),
+        throughput_tok_per_s=throughput, tok_per_req_s=tok_per_req,
+        total_tokens=total_tokens, total_e2e=total_e2e,
+        t_min_arrival=t_lo, t_max_done=t_hi)
 
 
 @dataclass

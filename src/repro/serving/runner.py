@@ -123,6 +123,11 @@ class RunnerConfig:
     # step's active slots) | "pallas"/"pallas_interpret" (SGMV kernel) |
     # "dense" (the pre-pool full stacked scan; equivalence oracle)
     mixed_lora_impl: str = "ref"
+    # shard the packed token axis of the mixed step over the mesh "data"
+    # axis (per-token metadata + input embeds split; per-request arrays
+    # and sampled ids replicated).  No-op without a mesh or with a
+    # size-1 data axis; False keeps the replicate-everything TP layout.
+    data_shard_tokens: bool = True
 
 
 @dataclass(frozen=True)
@@ -589,6 +594,10 @@ class ModelRunner:
         self.mesh = mesh
         self._shard: Optional[StepShardings] = None
         self._meta_sharding = None
+        self._rep_sharding = None
+        # token-bucket floor: pow2 buckets double from here so the packed
+        # token axis always divides the data-axis shard count
+        self._tok_bucket_lo = 1
         if mesh is not None:
             allowed = (("attn", rcfg.mixed_attn_impl, ("ref",)),
                        ("ssd", rcfg.mixed_ssd_impl, ("ref",)),
@@ -604,8 +613,26 @@ class ModelRunner:
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
             pspecs = shd.param_specs_tree(cfg, pshape, mesh=mesh)
             params = jax.device_put(params, shd.to_named(pspecs, mesh))
-            self._shard = shd.mixed_step_shardings(cfg, mesh)
-            self._meta_sharding = self._shard.named(self._shard.replicated)
+            data_axis = "data" if rcfg.data_shard_tokens \
+                and "data" in mesh.axis_names else None
+            self._shard = shd.mixed_step_shardings(cfg, mesh,
+                                                   data_axis=data_axis)
+            # data-sharded token axis: pad every token bucket to a
+            # multiple of the data-axis size so P(data) always divides
+            tok_ax = next((a for a in self._shard.tok_meta
+                           if a is not None), None)
+            if tok_ax is not None:
+                self._tok_bucket_lo = int(mesh.shape[tok_ax])
+            sh = self._shard
+            tm, te = sh.named(sh.tok_meta), sh.named(sh.tok_embeds)
+            rep = sh.named(sh.replicated)
+            # per-leaf layout of the _assemble_mixed meta tuple:
+            # (tok, emb, use, fb, pos, qln, ad, act, bt, rows, cols, wb,
+            #  wo, out_rows, run_slots, tok_slots, snap) — token-axis
+            # leaves split over data, request/slot-axis leaves replicated
+            self._meta_sharding = (tm, te, tm, tm, tm, tm, tm, rep, rep,
+                                   tm, tm, tm, tm, rep, rep, tm, rep)
+            self._rep_sharding = rep
         self.params = params
         self.kinds = [k for k, _ in M.iter_layers(params, cfg)]
         self.attn_ids = [i for i, k in enumerate(self.kinds) if k == ATTN]
@@ -691,14 +718,21 @@ class ModelRunner:
         return jax.device_put(a, self._shard.named(spec))
 
     def _dev(self, a):
-        """Stage per-step metadata on device — replicated over the mesh in
-        sharded mode, the plain default placement otherwise.  Accepts a
-        pytree: sharded mode issues ONE batched transfer for the whole
-        tree rather than a dispatch per array (the mixed step stages ~17
-        metadata arrays every step)."""
-        if self._meta_sharding is not None:
-            return jax.device_put(a, self._meta_sharding)
+        """Stage host data on device, replicated over the mesh in sharded
+        mode, the plain default placement otherwise.  Accepts a pytree."""
+        if self._rep_sharding is not None:
+            return jax.device_put(a, self._rep_sharding)
         return jax.tree.map(jnp.asarray, a)
+
+    def _dev_meta(self, meta: Tuple):
+        """Stage the mixed step's 17-leaf metadata tuple on device in its
+        step layout — token-axis leaves split over the data axis when
+        token sharding is on (replicated otherwise), per-request/slot
+        leaves always replicated.  One batched transfer for the whole
+        tuple rather than a dispatch per array."""
+        if self._meta_sharding is not None:
+            return jax.device_put(meta, self._meta_sharding)
+        return jax.tree.map(jnp.asarray, meta)
 
     # ------------------------------------------------------------------
     # embeddings
@@ -755,8 +789,10 @@ class ModelRunner:
         C = len(mb.snap_rows)
         dump_block = rc.num_blocks - 1
         dump_slot = rc.max_running - 1
-        # bucketed shapes (powers of two) bound the jit trace count
-        Tb = next_pow2(max(T, 1))
+        # bucketed shapes (powers of two) bound the jit trace count; the
+        # token bucket doubles from the data-shard floor so P(data)
+        # always divides the packed axis
+        Tb = next_pow2(max(T, 1), lo=self._tok_bucket_lo)
         Rb = next_pow2(max(R, 1))
         Cb = next_pow2(max(C, 1))
         nbb = next_pow2(max(max((len(t) for t in mb.block_tables),
@@ -811,9 +847,9 @@ class ModelRunner:
             if mb.xkv_list is not None else None
         self.t_assembly += time.perf_counter() - t_host
 
-        meta = self._dev((tok, emb, use, fb, pos, qln, ad, act, bt, rows,
-                          cols, wb, wo, out_rows, run_slots, tok_slots,
-                          snap))
+        meta = self._dev_meta((tok, emb, use, fb, pos, qln, ad, act, bt,
+                               rows, cols, wb, wo, out_rows, run_slots,
+                               tok_slots, snap))
         return (self._spec, self.params, self.adapter_layers, self.k_pool,
                 self.v_pool, self.live_ssm, self.live_conv, self.tok_buf,
                 *meta, xkv)

@@ -12,7 +12,8 @@ import math
 
 from benchmarks.common import stage_row
 from repro.serving.metrics import (METRIC_KEYS, MetricsAggregate,
-                                   aggregate, speedup_table)
+                                   aggregate, merge_aggregates,
+                                   speedup_table)
 
 
 def fake_metrics(arrival, done, prompt_len=50, output_len=50):
@@ -81,3 +82,65 @@ def test_row_default_construction_keeps_field_order():
     callers (tok_per_req_s defaults)."""
     m = MetricsAggregate(0, {}, {}, {}, 0.0)
     assert m.tok_per_req_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# merge_aggregates — the multi-replica router's fleet roll-up
+# ---------------------------------------------------------------------------
+def test_merge_uses_union_makespan_not_summed_throughput():
+    """Two replicas each serving 100 tokens over the SAME [0, 10]s
+    window: the fleet did 200 tokens in 10 wall-clock seconds (20
+    tok/s).  Summing per-replica throughputs would claim 20 as well
+    here but double-counts as soon as windows overlap partially — the
+    staggered case below is the discriminating one."""
+    a = aggregate([fake_metrics(0.0, 10.0)])
+    b = aggregate([fake_metrics(0.0, 10.0)])
+    m = merge_aggregates([a, b])
+    assert m.n == 2
+    assert m.total_tokens == 200
+    assert m.throughput_tok_per_s == 200 / 10.0
+
+
+def test_merge_staggered_windows():
+    """Replica windows [0,10] and [5,20]: union makespan is 20s, so the
+    fleet rate is 200/20 = 10 tok/s — NOT the 100/10 + 100/15 ≈ 16.7
+    a per-replica sum would report (the [5,10] overlap counted twice)."""
+    a = aggregate([fake_metrics(0.0, 10.0)])
+    b = aggregate([fake_metrics(5.0, 20.0)])
+    m = merge_aggregates([a, b])
+    assert m.throughput_tok_per_s == 200 / 20.0
+    assert m.t_min_arrival == 0.0 and m.t_max_done == 20.0
+    summed = a.throughput_tok_per_s + b.throughput_tok_per_s
+    assert m.throughput_tok_per_s < summed
+
+
+def test_merge_means_are_n_weighted():
+    """Means merge exactly: 1 request at e2e=10 + 3 at e2e=2 → 4."""
+    a = aggregate([fake_metrics(0.0, 10.0)])
+    b = aggregate([fake_metrics(0.0, 2.0)] * 3)
+    m = merge_aggregates([a, b])
+    assert m.n == 4
+    assert math.isclose(m.means["e2e"], (10.0 + 3 * 2.0) / 4)
+
+
+def test_merge_single_and_empty_parts():
+    """Empty parts drop out; a single surviving part passes through
+    untouched (no approximation applied); all-empty merges to the empty
+    aggregate."""
+    a = aggregate([fake_metrics(0.0, 10.0)])
+    assert merge_aggregates([a, aggregate([])]) is a
+    m = merge_aggregates([aggregate([]), aggregate([])])
+    assert m.n == 0 and m.throughput_tok_per_s == 0.0
+
+
+def test_merge_without_endpoints_falls_back():
+    """Parts whose sources carried no arrival/done timestamps (NaN
+    endpoints) can't form a union makespan — the merge falls back to
+    the per-request rate instead of inventing a wall-clock."""
+    recs = [fake_metrics(0.0, 10.0)]
+    for r in recs:
+        del r["arrival"], r["done"]
+    a, b = aggregate(recs), aggregate([fake_metrics(0.0, 5.0)])
+    m = merge_aggregates([a, b])
+    assert m.throughput_tok_per_s == m.tok_per_req_s
+    assert m.total_tokens == a.total_tokens + b.total_tokens

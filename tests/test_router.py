@@ -1,0 +1,305 @@
+"""Multi-replica router (serving/router.py): placement, stickiness,
+drain/failover and fleet-vs-oracle equivalence.
+
+The router is pure host-side python over the replica-facing Engine
+surface, so everything here runs single-device — no mesh marker.  The
+load-bearing property is the oracle equivalence: because decoding is
+deterministic argmax over shared params, an R-replica affinity fleet
+must produce token-for-token the same outputs as a single engine fed
+the same trace, regardless of how placement scatters the requests.
+Locality scoring then only changes WHERE prefixes hit, never WHAT gets
+sampled — which is what makes the hit-rate benchmark
+(``benchmarks/bench_router.py``) a pure placement measurement.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.alora import AdapterSpec, init_adapter_weights
+from repro.models import init_params
+from repro.serving import Engine, EngineConfig
+from repro.serving.router import Router
+
+KEY = jax.random.key(0)
+INV = (7, 8, 9)
+
+
+def scaled_adapter(cfg, seed, rank=8, scale=30.0):
+    w = init_adapter_weights(jax.random.key(seed), cfg, rank)
+    return {seg: {k: (v * scale if k.startswith("b") else v)
+                  for k, v in leaves.items()}
+            for seg, leaves in w.items()}
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    """Lazily-built (cfg, params, adapters) per arch, shared across the
+    module so each family compiles once."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_reduced(arch)
+            params = init_params(KEY, cfg)
+            ads = [(AdapterSpec(f"ad{i}", rank=8,
+                                invocation_tokens=INV if i % 2 else None),
+                    scaled_adapter(cfg, 100 + i))
+                   for i in range(3)]
+            cache[arch] = (cfg, params, ads)
+        return cache[arch]
+
+    return get
+
+
+def mk_router(zoo, arch, n, policy="affinity", **ecfg_kw):
+    """N identically-constructed single-device replicas behind a router.
+
+    Same construction per replica (shared cached params, same adapter
+    registration order) — the registry uids that salt block hashes must
+    agree across the fleet for prefix chains to be portable.
+    """
+    cfg, params, ads = zoo(arch)
+    kw = dict(max_running=4, max_batched_tokens=64, adapter_slots=2)
+    kw.update(ecfg_kw)
+    return Router([Engine(cfg, params, adapters=ads,
+                          engine_cfg=EngineConfig(**kw))
+                   for _ in range(n)], policy=policy)
+
+
+def run_trace(router, cfg, *, sessions=5, turns=2, gen=5, seed=3,
+              use_sessions=False):
+    """Multi-turn multi-adapter trace (the bench_router shape, smaller):
+    turn k+1 extends turn k's prompt + generated tokens, alternating
+    base and aLoRA turns.  Returns router-global ids in submit order."""
+    rng = np.random.RandomState(seed)
+    hi = min(400, cfg.vocab_size)
+    convo = [list(rng.randint(10, hi, 24 + 4 * (s % 3)))
+             for s in range(sessions)]
+    gids = []
+    for t in range(turns):
+        round_ids = []
+        for s in range(sessions):
+            adapter = f"ad{s % 2}" if t % 2 else None
+            kw = dict(session=s) if use_sessions else {}
+            round_ids.append(router.submit(convo[s], gen,
+                                           adapter_name=adapter, **kw))
+        router.run_until_idle()
+        for s, gid in enumerate(round_ids):
+            out = router.request(gid).output_tokens
+            assert len(out) == gen
+            convo[s] = convo[s] + list(out) \
+                + list(rng.randint(10, hi, 12))
+        gids.extend(round_ids)
+    return gids
+
+
+# ---------------------------------------------------------------------------
+# construction / validation
+# ---------------------------------------------------------------------------
+def test_construction_validation(zoo):
+    with pytest.raises(ValueError):
+        Router([])
+    cfg, params, ads = zoo("granite-3.2-8b")
+    eng = Engine(cfg, params, adapters=ads,
+                 engine_cfg=EngineConfig(max_running=4,
+                                         max_batched_tokens=64,
+                                         adapter_slots=2))
+    with pytest.raises(ValueError):
+        Router([eng], policy="sticky-dice")
+
+
+# ---------------------------------------------------------------------------
+# fleet ≡ single-engine oracle (token for token)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,n", [("granite-3.2-8b", 2),
+                                    ("granite-3.2-8b", 4),
+                                    ("mamba2-2.7b", 2)])
+def test_router_matches_single_engine_oracle(zoo, arch, n):
+    """R-replica affinity fleet ≡ R=1 (a bare engine behind the router)
+    on the same multi-turn trace: identical tokens for every global id.
+    Placement may scatter requests — sampling must not notice."""
+    cfg, _, _ = zoo(arch)
+    oracle = mk_router(zoo, arch, 1)
+    fleet = mk_router(zoo, arch, n)
+    gids_o = run_trace(oracle, cfg)
+    gids_f = run_trace(fleet, cfg)
+    assert gids_o == gids_f
+    for gid in gids_f:
+        assert fleet.request(gid).output_tokens == \
+            oracle.request(gid).output_tokens, gid
+    # the fleet actually used more than one replica
+    assert len({p.replica for p in fleet.placements}) > 1
+
+
+# ---------------------------------------------------------------------------
+# placement: locality scoring + spread
+# ---------------------------------------------------------------------------
+def test_affinity_follows_prefix_and_spreads_cold(zoo):
+    """Two cold sessions spread (least-outstanding); each session's
+    second turn follows its prefix blocks to the replica that served
+    turn one, with a non-zero scored cache depth."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    rng = np.random.RandomState(11)
+    a = list(rng.randint(10, 400, 40))
+    b = list(rng.randint(10, 400, 40))
+    ga = router.submit(a, 5)
+    gb = router.submit(b, 5)          # a's replica has outstanding work
+    assert router.placements[0].replica != router.placements[1].replica
+    router.run_until_idle()
+    a2 = a + list(router.request(ga).output_tokens) + [17, 18, 19, 20]
+    b2 = b + list(router.request(gb).output_tokens) + [21, 22, 23, 24]
+    router.submit(a2, 5, adapter_name="ad1")   # aLoRA turn: base-aligned
+    router.submit(b2, 5, adapter_name="ad1")   # hashes still match
+    router.run_until_idle()
+    for first, second in ((0, 2), (1, 3)):
+        p1, p2 = router.placements[first], router.placements[second]
+        assert p2.replica == p1.replica, (p1, p2)
+        assert p2.cached_tokens > 0
+        assert not p2.via_session
+
+
+def test_sticky_sessions_pin(zoo):
+    """``session=`` pins every later turn to the first turn's replica
+    and the placement log records the pin."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    run_trace(router, cfg, sessions=4, turns=2, use_sessions=True)
+    by_session = {}
+    for t in range(2):
+        for s in range(4):
+            p = router.placements[t * 4 + s]
+            by_session.setdefault(s, []).append(p)
+    for s, places in by_session.items():
+        assert len({p.replica for p in places}) == 1, s
+        assert not places[0].via_session        # first turn is scored
+        assert all(p.via_session for p in places[1:]), s
+
+
+def test_round_robin_is_blind(zoo):
+    """round_robin cycles the live replicas in submit order, ignoring
+    locality entirely (the bench baseline)."""
+    router = mk_router(zoo, "granite-3.2-8b", 2, policy="round_robin")
+    prompt = list(np.random.RandomState(4).randint(10, 400, 30))
+    for _ in range(4):
+        router.submit(list(prompt), 4)          # identical prompts...
+    assert [p.replica for p in router.placements] == [0, 1, 0, 1]
+    assert all(p.cached_tokens == 0 for p in router.placements)
+
+
+# ---------------------------------------------------------------------------
+# drain / failover
+# ---------------------------------------------------------------------------
+def test_drain_failover_loses_nothing(zoo):
+    """Stopping a replica mid-flight re-routes its queued requests and
+    drains its admitted ones: every request still reaches full length
+    under its stable global id, and no new work lands on the stopped
+    replica."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    rng = np.random.RandomState(9)
+    gen = 5
+    gids = [router.submit(list(rng.randint(10, 400, 32 + i)), gen,
+                          adapter_name=[None, "ad0", "ad1"][i % 3])
+            for i in range(12)]
+    for _ in range(2):                  # admit a first wave everywhere
+        router.step()
+    victim = 0
+    assert any(r == victim for r, _ in router._routes.values())
+    moved = router.stop_replica(victim)
+    assert moved > 0 and router.reroutes == moved
+    # idempotent; and the survivor cannot be stopped too
+    assert router.stop_replica(victim) == 0
+    with pytest.raises(RuntimeError):
+        router.stop_replica(1)
+    # the failed stop left the fleet routable
+    extra = router.submit(list(rng.randint(10, 400, 30)), gen)
+    assert router.replica_of(extra) == 1
+    router.run_until_idle()
+    for gid in gids + [extra]:
+        assert len(router.request(gid).output_tokens) == gen, gid
+    # drained replica finished its admitted work and holds nothing new
+    assert router.replicas[victim].idle
+
+
+def test_drain_rerouted_tokens_match_oracle(zoo):
+    """Rerouted requests re-prefill from scratch on the survivor —
+    deterministic decoding means their tokens still match an untouched
+    single-engine run of the same trace."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    oracle = mk_router(zoo, "granite-3.2-8b", 1)
+    fleet = mk_router(zoo, "granite-3.2-8b", 2)
+    rng = np.random.RandomState(21)
+    prompts = [list(rng.randint(10, 400, 30 + 2 * i)) for i in range(8)]
+    go = [oracle.submit(list(p), 5) for p in prompts]
+    oracle.run_until_idle()
+    gf = [fleet.submit(list(p), 5) for p in prompts]
+    fleet.step()
+    fleet.stop_replica(1)
+    fleet.run_until_idle()
+    for a, b in zip(go, gf):
+        assert oracle.request(a).output_tokens == \
+            fleet.request(b).output_tokens
+
+
+# ---------------------------------------------------------------------------
+# fleet adapter lifecycle / stats
+# ---------------------------------------------------------------------------
+def test_fleet_adapter_registration_and_residency(zoo):
+    cfg, params, ads = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    uid = router.register_adapter(AdapterSpec("late", rank=8),
+                                  scaled_adapter(cfg, 321))
+    assert isinstance(uid, str) or isinstance(uid, int)
+    gid = router.submit(list(range(10, 40)), 4, adapter_name="late")
+    router.run_until_idle()
+    assert len(router.request(gid).output_tokens) == 4
+    idx = router.replica_of(gid)
+    res = router.replicas[idx].adapter_residency()
+    assert res.get("late") is True
+    # the other replica registered it too (uid-aligned), just not resident
+    other = router.replicas[1 - idx].adapter_residency()
+    assert "late" in other and other["late"] is False
+    router.unregister_adapter("late")
+    assert all("late" not in eng.adapter_residency()
+               for eng in router.replicas)
+
+
+def test_probe_is_non_acquiring(zoo):
+    """``cached_prefix_tokens`` is the router's placement primitive — it
+    must not bump hit/miss counters or refcounts (a probed-but-not-
+    placed replica would otherwise mis-report its cache behavior)."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 1)
+    prompt = list(np.random.RandomState(6).randint(10, 400, 40))
+    router.submit(list(prompt), 5)
+    router.run_until_idle()
+    eng = router.replicas[0]
+    mgr = eng.kv_mgr or eng.st_mgr
+    h0, m0 = mgr.hits, mgr.misses
+    depth = eng.cached_prefix_tokens(prompt + [1, 2, 3], "ad1")
+    assert depth > 0
+    assert (mgr.hits, mgr.misses) == (h0, m0)
+
+
+def test_fleet_metrics_merge(zoo):
+    """Fleet aggregate = merged per-replica parts: request counts and
+    token totals sum exactly, throughput uses the union makespan (so it
+    never exceeds what summing per-replica rates would claim)."""
+    cfg, _, _ = zoo("granite-3.2-8b")
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    gids = run_trace(router, cfg, sessions=5, turns=2)
+    fleet = router.metrics_for(gids)
+    per = router.per_replica_metrics(gids)
+    assert len(per) == 2                # affinity actually used both
+    assert fleet.n == sum(p.n for p in per.values()) == len(gids)
+    assert fleet.total_tokens == sum(p.total_tokens for p in per.values())
+    assert 0 < fleet.throughput_tok_per_s <= \
+        sum(p.throughput_tok_per_s for p in per.values())
+    hit = router.kv_hit_rate()
+    hits = sum((e.kv_mgr or e.st_mgr).hits for e in router.replicas)
+    total = sum((e.kv_mgr or e.st_mgr).hits + (e.kv_mgr or e.st_mgr).misses
+                for e in router.replicas)
+    assert hit == hits / total
+    assert 0.0 < hit < 1.0              # multi-turn trace actually reuses

@@ -200,6 +200,71 @@ def test_zero_postwarmup_recompiles_sharded(zoo):
 
 
 # ---------------------------------------------------------------------------
+# data-parallel token sharding (EngineConfig.data_shard_tokens)
+# ---------------------------------------------------------------------------
+@needs_mesh
+@pytest.mark.parametrize("arch", ARCHS)
+def test_data_shard_off_matches_on(zoo, arch):
+    """Token sharding is a pure layout change: the same mesh with
+    ``data_shard_tokens=False`` (replicate-everything TP, the pre-change
+    layout) ≡ the data-sharded default, token for token, with identical
+    scheduling (cache hits, step counts) and the one-call-per-step
+    invariant on both sides."""
+    mesh = make_host_mesh(data=2, model=4)
+    on_toks, on_st = run_workload(mk_engine(zoo, arch, mesh))
+    off_toks, off_st = run_workload(
+        mk_engine(zoo, arch, make_host_mesh(data=2, model=4),
+                  data_shard_tokens=False))
+    assert on_toks == off_toks
+    assert all(t for t in on_toks)
+    assert on_st["hits"] == off_st["hits"]
+    assert on_st["steps"] == off_st["steps"]
+    assert on_st["mixed_calls"] == on_st["steps"]
+    assert off_st["mixed_calls"] == off_st["steps"]
+
+
+@needs_mesh
+def test_data_shard_token_layouts(zoo):
+    """The runner actually splits the packed token axis: per-token meta
+    and embed leaves carry P("data") layouts, the token bucket floor
+    equals the data-axis size (so every pow2 bucket divides), and the
+    per-request/sampled leaves stay replicated.  With the knob off — or
+    with a size-1 data axis — everything degrades to the replicated
+    TP-only layout."""
+    from jax.sharding import PartitionSpec as P
+
+    eng = mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4))
+    r = eng.runner
+    assert r._tok_bucket_lo == 2
+    assert r._shard.tok_meta == P("data")
+    assert r._shard.tok_embeds == P("data", None)
+    # meta tuple layout: leaf 0 (tok_ids) token-sharded, leaf 1 (embeds)
+    # token-sharded on dim 0, leaf 14 (run_slots) replicated
+    assert r._meta_sharding[0].spec == P("data")
+    assert r._meta_sharding[1].spec == P("data", None)
+    assert r._meta_sharding[14].spec == P()
+
+    off = mk_engine(zoo, "granite-3.2-8b", make_host_mesh(data=2, model=4),
+                    data_shard_tokens=False)
+    assert off.runner._tok_bucket_lo == 1
+    assert off.runner._shard.tok_meta == P(None)
+
+    model_only = mk_engine(zoo, "granite-3.2-8b",
+                           make_host_mesh(data=1, model=8))
+    assert model_only.runner._tok_bucket_lo == 1
+    assert model_only.runner._shard.tok_meta == P(None)
+
+
+def test_token_bucket_floor_divisibility():
+    """pow2 buckets double FROM the floor, so every bucket the assembly
+    can produce is a multiple of the data-axis size."""
+    for lo in (1, 2, 4):
+        for n in range(1, 70):
+            b = runner_mod.next_pow2(n, lo=lo)
+            assert b >= n and b % lo == 0, (n, lo, b)
+
+
+# ---------------------------------------------------------------------------
 # knob validation / default-path isolation
 # ---------------------------------------------------------------------------
 @needs_mesh

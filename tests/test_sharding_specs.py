@@ -160,6 +160,49 @@ def test_mixed_step_shardings_divide(arch, mesh):
 
 
 # ---------------------------------------------------------------------------
+# data-parallel token axis (EngineConfig.data_shard_tokens layouts)
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(arch=st.sampled_from(ARCHS), mesh=st.sampled_from(MESHES))
+def test_token_axis_specs(arch, mesh):
+    """Token-axis layouts activate exactly when a data axis with size
+    > 1 is requested: tok_meta/tok_embeds carry P(data)/P(data, None)
+    and attn_out's leading (token) dim follows; otherwise — no request,
+    or a size-1 axis — everything stays replicated (P(None) layouts),
+    for every config × mesh shape."""
+    cfg = _cfg(arch, True)
+    ms = mesh["model"]
+    if not (cfg.num_kv_heads % ms == 0 and cfg.num_heads % ms == 0
+            or cfg.head_dim % ms == 0):
+        pytest.skip("arch does not support this model-axis width")
+    base = shd.mixed_step_shardings(cfg, mesh)
+    assert base.tok_meta == P(None)
+    assert base.tok_embeds == P(None, None)
+    assert tuple(base.attn_out)[0] is None
+    ds = shd.mixed_step_shardings(cfg, mesh, data_axis="data")
+    want = "data" if mesh["data"] > 1 else None
+    assert ds.tok_meta == P(want)
+    assert ds.tok_embeds == P(want, None)
+    assert tuple(ds.attn_out)[0] == want
+    # the TP pool layouts are untouched by token sharding
+    assert ds.kv_pool == base.kv_pool
+    assert ds.ssm_pool == base.ssm_pool and ds.conv_pool == base.conv_pool
+
+
+@settings(**COMMON)
+@given(n=st.integers(1, 4096), lo=st.sampled_from([1, 2, 4, 8, 16]))
+def test_token_bucket_floor(n, lo):
+    """The runner's pow2 token buckets double FROM the data-axis size,
+    so every bucket divides the axis and P(data) always lowers."""
+    from repro.serving.runner import next_pow2
+    b = next_pow2(n, lo=lo)
+    assert b >= n and b >= lo
+    assert b % lo == 0
+    assert b & (b - 1) == 0                    # still pow2
+    assert b < 2 * max(n, lo)                  # tight: no over-padding
+
+
+# ---------------------------------------------------------------------------
 # to_named round-trip on a real mesh
 # ---------------------------------------------------------------------------
 @settings(**COMMON)
