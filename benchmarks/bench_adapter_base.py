@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, make_engine, stage_row
 from repro.serving import pipelines as P
-from repro.serving.metrics import speedup_table
+from repro.serving.metrics import fmt_speedups, speedup_table
 
 PROMPT_LENS = [48, 96, 192]
 
@@ -26,8 +26,7 @@ def run():
             emit(f"fig11/base-after-adapter/{kind}/prompt{plen}",
                  m.means["e2e"] * 1e6, stage_row(m))
         sp = speedup_table(row["lora"], row["alora"])
-        emit(f"fig11/speedup/prompt{plen}", 0.0,
-             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+        emit(f"fig11/speedup/prompt{plen}", 0.0, fmt_speedups(sp))
 
 
 if __name__ == "__main__":

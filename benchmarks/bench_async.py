@@ -10,7 +10,7 @@ from __future__ import annotations
 from benchmarks.common import emit, make_engine, stage_row
 from repro.serving import EngineConfig
 from repro.serving import pipelines as P
-from repro.serving.metrics import speedup_table
+from repro.serving.metrics import fmt_speedups, speedup_table
 
 RATES = [1.0, 4.0, 16.0]
 N_REQ = 6
@@ -39,8 +39,7 @@ def run():
                  f"tok/s over makespan; per-request rate="
                  f"{m.tok_per_req_s:.1f} tok/s")
         sp = speedup_table(rows["lora"], rows["alora"])
-        emit(f"fig8/speedup/rate{rate}", 0.0,
-             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+        emit(f"fig8/speedup/rate{rate}", 0.0, fmt_speedups(sp))
 
     # Fig. 9: cache-capacity cliff — a pool smaller than the in-flight
     # working set evicts base blocks before their adapter call arrives,

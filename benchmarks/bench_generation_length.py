@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, make_engine, stage_row
 from repro.serving import pipelines as P
-from repro.serving.metrics import speedup_table
+from repro.serving.metrics import fmt_speedups, speedup_table
 
 GEN_LENS = [16, 48, 96, 192]
 
@@ -34,8 +34,7 @@ def run():
                  f"ttft={m_final.means['ttft']*1e6:.0f}us "
                  f"hit={m_final.means['cache_hit_frac']:.2f}")
         sp = speedup_table(rows["lora"][0], rows["alora"][0])
-        emit(f"fig10/speedup-eval/gen{glen}", 0.0,
-             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+        emit(f"fig10/speedup-eval/gen{glen}", 0.0, fmt_speedups(sp))
 
 
 if __name__ == "__main__":

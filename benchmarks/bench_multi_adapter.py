@@ -30,7 +30,7 @@ from benchmarks.common import emit, make_engine, stage_row
 from repro.serving import EngineConfig
 from repro.serving import runner as runner_mod
 from repro.serving import pipelines as P
-from repro.serving.metrics import speedup_table
+from repro.serving.metrics import fmt_speedups, speedup_table
 
 N_ADAPTERS = 5
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -54,8 +54,7 @@ def run():
              f"ttft={m_final.means['ttft']*1e6:.0f}us "
              f"hit={m_final.means['cache_hit_frac']:.2f}")
     sp = speedup_table(rows["lora"][0], rows["alora"][0])
-    emit("sec441/speedup-eval", 0.0,
-         " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+    emit("sec441/speedup-eval", 0.0, fmt_speedups(sp))
 
 
 # ---------------------------------------------------------------------------

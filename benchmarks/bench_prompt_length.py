@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, make_engine, stage_row
 from repro.serving import pipelines as P
-from repro.serving.metrics import speedup_table
+from repro.serving.metrics import fmt_speedups, speedup_table
 
 PROMPT_LENS = [48, 96, 192, 384]
 GEN_LEN = 32
@@ -35,8 +35,7 @@ def run(out_rows=None):
                  m.means["e2e"] * 1e6, stage_row(m))
         sp = speedup_table(results[(plen, "lora")],
                            results[(plen, "alora")])
-        emit(f"fig6/speedup/prompt{plen}", 0.0,
-             " ".join(f"{k}={v:.2f}x" for k, v in sp.items()))
+        emit(f"fig6/speedup/prompt{plen}", 0.0, fmt_speedups(sp))
     return results
 
 

@@ -160,6 +160,58 @@ def router_table(recs):
               f"{r.get('reroutes', 0)} |")
 
 
+def d2h_table(recs):
+    """Device→host payloads from the runner's ``log_d2h`` ring
+    (``bench_mixed_batch.py`` appends one obs record per measured
+    mode).  The paper-critical row is tag ``step``: sampled int32 ids
+    only, a handful of elements per step — never ``(R, vocab)``
+    logits."""
+    print("\n### D2H payloads — runner `log_d2h` ring\n")
+    print("| arch | mode | tag | transfers | elems | KiB | elems/step |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        steps = max(r.get("steps", 0), 1)
+        for tag in sorted(r.get("d2h", {})):
+            row = r["d2h"][tag]
+            print(f"| {r['arch']} | {r['mode']} | {tag} | "
+                  f"{row['count']:.0f} | {row['elems']:.0f} | "
+                  f"{row['bytes'] / 1024:.1f} | "
+                  f"{row['elems'] / steps:.1f} |")
+
+
+def reuse_table(recs):
+    """Cache-reuse ledger rolled up per adapter (the paper's central
+    quantity): tokens whose KV the admission probe reused from another
+    adapter's (or the base model's) cache vs tokens it had to
+    recompute."""
+    rows = [(r, uid) for r in recs for uid in sorted(r.get("reuse", {}))]
+    if not rows:
+        return
+    print("\n### Cache-reuse ledger — per adapter\n")
+    print("| arch | mode | adapter | admissions | tok reused | "
+          "tok recomputed | reuse frac | state reuses |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r, uid in rows:
+        row = r["reuse"][uid]
+        print(f"| {r['arch']} | {r['mode']} | {uid} | "
+              f"{row['admissions']:.0f} | {row['reused']:.0f} | "
+              f"{row['recomputed']:.0f} | {row['reuse_frac']:.2f} | "
+              f"{row['state_reuses']:.0f} |")
+
+
+def trace_overhead_table(recs):
+    """Tracer on/off A-B (``bench_mixed_batch.py --trace-check``): the
+    observability layer's cost against its <2% budget."""
+    print("\n### Tracing overhead — tracer on vs off\n")
+    print("| arch | traced (us) | untraced (us) | overhead | events |")
+    print("|---|---|---|---|---|")
+    for r in recs:
+        print(f"| {r['arch']} | {fmt(r.get('traced_us'), '.0f')} | "
+              f"{fmt(r.get('untraced_us'), '.0f')} | "
+              f"{fmt(r.get('overhead_pct'))}% | "
+              f"{r.get('events', 0)} |")
+
+
 def audit_table(recs):
     """Compiled-step audit summary (``python -m repro.analysis`` appends
     one record per config × mesh).  "donated HBM" is the pool footprint
@@ -228,6 +280,24 @@ def main():
             latest[(r["arch"], r["replicas"], r["policy"],
                     r["smoke"])] = r
         router_table(list(latest.values()))
+    obs = load(os.path.join(BASE, "obs.jsonl"))
+    if obs:
+        # append-mode artifact: last record per (arch, smoke, mode) wins
+        latest = {}
+        for r in obs:
+            latest[(r["arch"], r["smoke"], r["mode"])] = r
+        obs = sorted(latest.values(),
+                     key=lambda r: (r["arch"], r["mode"]))
+        d2h_table(obs)
+        reuse_table(obs)
+    overhead = load(os.path.join(BASE, "trace_overhead.jsonl"))
+    if overhead:
+        # append-mode artifact: last record per (arch, smoke) wins
+        latest = {}
+        for r in overhead:
+            latest[(r["arch"], r["smoke"])] = r
+        trace_overhead_table(sorted(latest.values(),
+                                    key=lambda r: r["arch"]))
     audit = load(os.path.join(BASE, "analysis_audit.jsonl"))
     if audit:
         # append-mode artifact: last record per (arch, mesh) wins

@@ -14,7 +14,7 @@ import jax
 from repro.configs import ASSIGNED_ARCHS, get_reduced
 from repro.core.alora import AdapterSpec, init_adapter_weights
 from repro.models import init_params
-from repro.serving import Engine, speedup_table
+from repro.serving import Engine, fmt_speedups, speedup_table
 from repro.serving import pipelines as P
 
 
@@ -56,7 +56,7 @@ def main():
         results["lora"][0], "eval"),
         results["alora"][1].stage_metrics(results["alora"][0], "eval"))
     print("== adapter-evaluation speedup (aLoRA over LoRA baseline) ==")
-    print("   " + "  ".join(f"{k}: {v:.2f}x" for k, v in sp.items()))
+    print("   " + fmt_speedups(sp))
 
 
 if __name__ == "__main__":

@@ -25,6 +25,13 @@ inside ``Engine.step``'s call graph:
   B3  no ``time.*`` calls inside jit-decorated functions anywhere in
       the scanned files (a traced ``time.time()`` is a constant baked
       into the compiled step — always a bug).
+  B4  trace recording (``repro.obs.tracer``, reached from the hot graph
+      through ``self.tracer.*``) must be append-only plain python:
+      EVERY function in the obs recording files is checked wholesale —
+      any ``jax.*``/``jnp.*`` call (``obs-jax``) or blocking construct
+      (``obs-sync``) is a violation, with no ``sync-ok`` annotation
+      escape.  Exporters (``repro.obs.export``) are exempt: they never
+      run on the step path.
 
 The call graph is intraprocedural over the scanned files: ``self.x()``
 resolves within the class, ``self.<attr>.x()`` through the static
@@ -73,7 +80,12 @@ ATTR_CLASSES: Dict[str, str] = {
     "adapter_pool": "AdapterPool",
     "host_bufs": "HostBufferPool",
     "cache": "PrefixCache",
+    "tracer": "Tracer",
 }
+# obs files exempt from the wholesale B4 recording rule: exporters run
+# strictly off the step path (after a run / from a CLI), so they may do
+# real work — everything else under obs/ is recording surface
+OBS_EXPORT_FILES = frozenset({"export.py"})
 # Router.submit is the multi-replica ADMIT path: every placement probes
 # N replicas (prefix-cache walk + residency snapshot + load read), so a
 # hidden device sync there would multiply by the fleet size per request.
@@ -270,6 +282,35 @@ def _check_hot_function(key, fobj: _Func, jnp_rule: bool
     return out
 
 
+def _check_obs_function(key, fobj: _Func) -> List[Violation]:
+    """B4: trace-recording code is append-only plain python — reject
+    ANY jax/jnp call and every blocking construct, annotation or not."""
+    out: List[Violation] = []
+    qn = _qualname(*key)
+    for node in ast.walk(fobj.node):
+        if not isinstance(node, ast.Call):
+            continue
+        kind = _sync_call_kind(node)
+        if kind is not None:
+            out.append(Violation(
+                fobj.path, node.lineno, "obs-sync",
+                f"{qn}: {kind} in trace-recording code — recording runs "
+                "inside schedule/submit phases; it must stay append-only "
+                "plain python (no annotation escape — move the work to "
+                "repro.obs.export)"))
+        root = node.func
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id in ("jax", "jnp"):
+            out.append(Violation(
+                fobj.path, node.lineno, "obs-jax",
+                f"{qn}: {ast.unparse(node.func)}() in trace-recording "
+                "code — no jax/jnp calls of any kind (even H2D staging) "
+                "belong in the recording path; move the work to "
+                "repro.obs.export"))
+    return out
+
+
 def _check_jitted_time(funcs) -> List[Violation]:
     out: List[Violation] = []
     for key, fobj in funcs.items():
@@ -290,17 +331,22 @@ def _check_jitted_time(funcs) -> List[Violation]:
 
 def lint_files(paths: List[str], *,
                kernel_paths: Tuple[str, ...] = (),
+               obs_paths: Tuple[str, ...] = (),
                roots: Tuple[Tuple[str, str], ...] = ROOTS,
                retire: Optional[Set[Tuple[str, str]]] = None,
                oracle: Optional[Set[Tuple[str, str]]] = None,
                attr_classes: Optional[Dict[str, str]] = None
                ) -> List[Violation]:
     """Lint ``paths`` (call-graph rules B1/B2 from ``roots``) plus
-    ``kernel_paths`` (B1 everywhere) plus B3 over everything."""
+    ``kernel_paths`` (B1 everywhere) plus ``obs_paths`` (B4 wholesale —
+    trace recording is also indexed into the call graph, so hot-graph
+    ``self.tracer.*`` calls resolve and get B1/B2 on top) plus B3 over
+    everything."""
     retire = RETIRE_PHASE if retire is None else retire
     oracle = SEQUENTIAL_ORACLE if oracle is None else oracle
     attr_classes = ATTR_CLASSES if attr_classes is None else attr_classes
-    funcs = _index_functions(list(paths))
+    funcs = _index_functions(list(paths) + list(obs_paths))
+    ofuncs = _index_functions(list(obs_paths))
     kfuncs = _index_functions(list(kernel_paths))
     violations: List[Violation] = []
     # phase tables must describe code that exists — a stale entry would
@@ -321,18 +367,28 @@ def lint_files(paths: List[str], *,
     for key in sorted(kfuncs, key=lambda k: (k[0] or "", k[1])):
         violations.extend(_check_hot_function(key, kfuncs[key],
                                               jnp_rule=False))
+    for key in sorted(ofuncs, key=lambda k: (k[0] or "", k[1])):
+        violations.extend(_check_obs_function(key, ofuncs[key]))
     violations.extend(_check_jitted_time({**funcs, **kfuncs}))
     return violations
 
 
 def lint_tree(src_root: str) -> List[Violation]:
-    """Lint the repo's serving + kernels trees with the default tables.
-    ``src_root`` is the directory containing the ``repro`` package."""
+    """Lint the repo's serving + kernels + obs trees with the default
+    tables.  ``src_root`` is the directory containing the ``repro``
+    package."""
     serving = os.path.join(src_root, "repro", "serving")
     kernels = os.path.join(src_root, "repro", "kernels")
+    obs = os.path.join(src_root, "repro", "obs")
     paths = sorted(os.path.join(serving, f) for f in os.listdir(serving)
                    if f.endswith(".py"))
     kpaths = tuple(sorted(os.path.join(kernels, f)
                           for f in os.listdir(kernels)
                           if f.endswith(".py")))
-    return lint_files(paths, kernel_paths=kpaths)
+    opaths: Tuple[str, ...] = ()
+    if os.path.isdir(obs):
+        opaths = tuple(sorted(os.path.join(obs, f)
+                              for f in os.listdir(obs)
+                              if f.endswith(".py")
+                              and f not in OBS_EXPORT_FILES))
+    return lint_files(paths, kernel_paths=kpaths, obs_paths=opaths)

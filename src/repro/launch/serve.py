@@ -15,6 +15,13 @@ every submission is placed by aLoRA-aligned prefix locality.
 ``--route {affinity,round_robin}`` selects the placement policy
 (round_robin is the blind baseline); with ``--replicas 1`` the router
 tier is skipped entirely and the engine is driven directly.
+
+``--trace-out FILE`` exports the aLoRA run's trace rings (every
+replica's, plus the router's, when a fleet ran) as a Perfetto timeline
+— load it at https://ui.perfetto.dev to see submit/retire overlap and
+per-request queue→prefill→decode lifecycles.  ``--metrics-out FILE``
+writes the same run's counters as a Prometheus text snapshot.  Schema:
+``docs/observability.md``.
 """
 from __future__ import annotations
 
@@ -27,7 +34,8 @@ from repro.configs import get_reduced
 from repro.core.alora import (PAPER_ALORA_RANK, PAPER_LORA_RANK,
                               AdapterSpec, init_adapter_weights)
 from repro.models import init_params
-from repro.serving import Engine, EngineConfig, speedup_table
+from repro.obs import prometheus_text, write_perfetto
+from repro.serving import Engine, EngineConfig, fmt_speedups, speedup_table
 from repro.serving import pipelines as P
 from repro.serving.router import POLICIES, Router
 
@@ -55,6 +63,14 @@ def build_engine(cfg, params, kind: str, n_adapters: int = 1,
     return Router([mk() for _ in range(replicas)], policy=route)
 
 
+def collect_tracers(eng):
+    """Every tracer a serving tier carries: per-replica engine tracers
+    plus the router's own when a fleet ran."""
+    if isinstance(eng, Router):
+        return [e.tracer for e in eng.replicas] + [eng.tracer]
+    return [eng.tracer]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3.2-8b")
@@ -68,6 +84,12 @@ def main() -> None:
                          "(1 = no router tier)")
     ap.add_argument("--route", choices=POLICIES, default="affinity",
                     help="placement policy with --replicas > 1")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the aLoRA run's Perfetto timeline JSON "
+                         "here (load at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the aLoRA run's counters here in the "
+                         "Prometheus text exposition format")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -106,7 +128,18 @@ def main() -> None:
         results["lora"][0], "eval"),
         results["alora"][1].stage_metrics(results["alora"][0], "eval"))
     print("adapter-evaluation speedups (LoRA baseline / aLoRA):",
-          {k: round(v, 2) for k, v in sp.items()})
+          fmt_speedups(sp))
+
+    if args.trace_out or args.metrics_out:
+        trs = collect_tracers(results["alora"][0])
+        if args.trace_out:
+            write_perfetto(args.trace_out, trs)
+            print(f"wrote Perfetto timeline -> {args.trace_out} "
+                  "(load at https://ui.perfetto.dev)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(prometheus_text(trs))
+            print(f"wrote Prometheus counters -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

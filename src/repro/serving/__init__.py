@@ -2,12 +2,13 @@
 dynamic adapter lifecycle (paged adapter-slot pool)."""
 from repro.serving.adapter_pool import AdapterPool
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.metrics import AdapterPoolStats, MetricsAggregate, aggregate, speedup_table
+from repro.serving.metrics import (AdapterPoolStats, MetricsAggregate,
+                                   aggregate, fmt_speedups, speedup_table)
 from repro.serving.request import Request, State
 from repro.serving.runner import ModelRunner, RunnerConfig
 
 __all__ = [
     "AdapterPool", "AdapterPoolStats", "Engine", "EngineConfig",
     "MetricsAggregate", "ModelRunner", "Request", "RunnerConfig", "State",
-    "aggregate", "speedup_table",
+    "aggregate", "fmt_speedups", "speedup_table",
 ]

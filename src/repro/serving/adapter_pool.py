@@ -79,6 +79,7 @@ from repro.core.alora import (
     per_layer_adapters,
     zero_adapter_weights,
 )
+from repro.obs.tracer import Tracer
 from repro.serving.metrics import AdapterPoolStats
 
 Params = Dict[str, Any]
@@ -120,9 +121,14 @@ class AdapterPool:
     """Fixed device slot pool + host registry (see module docstring)."""
 
     def __init__(self, cfg: ModelConfig, *, num_slots: int, slot_rank: int,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 tracer: Optional[Tracer] = None):
         assert num_slots >= 1 and slot_rank >= 1
         self.cfg = cfg
+        # trace recorder shared with the owning engine (adapter-lifecycle
+        # events land on the "pool" track); a disabled one standalone
+        self.tracer = tracer if tracer is not None \
+            else Tracer(enabled=False)
         self.num_slots = num_slots
         self.slot_rank = slot_rank
         self.mesh = mesh
@@ -248,6 +254,9 @@ class AdapterPool:
             reg.device_layers = [jax.tree.map(jax.device_put, lw)
                                  for lw in reg.host_layers]
         self.prefetch_issued += 1
+        if self.tracer.enabled:
+            self.tracer.event("pool", "prefetch", None, {"uid": uid})
+            self.tracer.count("adapter_prefetch_total")
 
     def acquire(self, uid: str) -> Optional[int]:
         """Pin ``uid``'s slot for a scheduled request, installing it
@@ -258,12 +267,19 @@ class AdapterPool:
             slot = self._take_slot()
             if slot is None:
                 self.acquire_fails += 1
+                if self.tracer.enabled:
+                    self.tracer.event("pool", "acquire_fail", None,
+                                      {"uid": uid})
+                    self.tracer.count("adapter_acquire_fails_total")
                 return None
             if reg.device_layers is None:
                 # weights were never prefetched — the H2D copy is issued
                 # here, on the admission path (still async, but without
                 # the queue-time head start)
                 self.stalled_installs += 1
+                if self.tracer.enabled:
+                    self.tracer.event("pool", "stall", None, {"uid": uid})
+                    self.tracer.count("adapter_stalls_total")
                 self.prefetch(uid)
             else:
                 self.prefetch_hits += 1      # install found staged weights
@@ -290,6 +306,10 @@ class AdapterPool:
                 self._lru.pop(uid)
                 slot, victim.slot = victim.slot, None
                 self.evictions += 1
+                if self.tracer.enabled:
+                    self.tracer.event("pool", "evict", None,
+                                      {"uid": uid, "slot": slot})
+                    self.tracer.count("adapter_evictions_total")
                 return slot
         return None
 
@@ -309,6 +329,10 @@ class AdapterPool:
         reg.device_layers = None
         reg.slot = slot
         self.installs += 1
+        if self.tracer.enabled:
+            self.tracer.event("pool", "install", None,
+                              {"uid": reg.uid, "slot": slot})
+            self.tracer.count("adapter_installs_total")
 
     # ------------------------------------------------------------------
     # introspection

@@ -54,6 +54,7 @@ from repro.core.block_hash import (AdapterKey, block_extra, hash_block,
 from repro.core.kv_manager import BlockManager, OutOfBlocks
 from repro.core.prefix_cache import PrefixCache
 from repro.models.model import Runtime
+from repro.obs.tracer import Tracer
 from repro.serving.adapter_pool import AdapterPool, AdapterRegistration, rank_bucket
 from repro.serving.metrics import AdapterPoolStats, MetricsAggregate, aggregate
 from repro.serving.request import Request, State
@@ -144,6 +145,14 @@ class EngineConfig:
     # step's from_buf gathers read them whole).  False keeps the
     # replicate-everything TP layout (the sharded≡unsharded A/B leg).
     data_shard_tokens: bool = True
+    # ---- tracing (repro.obs) -----------------------------------------
+    # Record request-lifecycle spans, step-phase spans, the cache-reuse
+    # ledger and pool events into this engine's Tracer.  None (default)
+    # follows the environment: on unless REPRO_TRACE=0.  Recording is
+    # append-only plain python (hot-path safe, lint-enforced); the
+    # overhead budget is bench-asserted (<2% mean step latency,
+    # benchmarks/bench_mixed_batch.py --trace-check).
+    trace: Optional[bool] = None
 
 
 class Engine:
@@ -161,6 +170,10 @@ class Engine:
                 "one-call-per-step mixed path; execution_mode="
                 f"{engine_cfg.execution_mode!r} is single-device only")
         adapters = adapters or []
+        # trace recorder (repro.obs): created FIRST so the adapter pool
+        # and runner can stamp events into the same per-replica rings;
+        # the router re-stamps replica ids after construction
+        self.tracer = Tracer(enabled=engine_cfg.trace)
         # dynamic adapter pool: construction-time adapters are ordinary
         # registrations; more can be registered/unregistered at any time
         # and cycle through the fixed device slots (heterogeneous ranks
@@ -176,7 +189,8 @@ class Engine:
                                      default=1))
             self.adapter_pool = AdapterPool(cfg, num_slots=n_slots,
                                             slot_rank=slot_rank,
-                                            mesh=engine_cfg.mesh)
+                                            mesh=engine_cfg.mesh,
+                                            tracer=self.tracer)
             for spec, w in adapters:
                 self.adapter_pool.register(spec, w)
 
@@ -193,7 +207,7 @@ class Engine:
         self.runner = ModelRunner(
             cfg, params, rcfg,
             self.adapter_pool.layers if self.adapter_pool else None, rt,
-            mesh=engine_cfg.mesh)
+            mesh=engine_cfg.mesh, tracer=self.tracer)
 
         has_attn = self.runner.La > 0
         has_ssm = self.runner.Ls > 0
@@ -309,6 +323,11 @@ class Engine:
         else:
             self.pending.append(req)
             self.pending.sort(key=lambda r: r.arrival_time)
+        if self.tracer.enabled:
+            self.tracer.event("lifecycle", "arrival", req.arrival_time,
+                              {"req_id": req.req_id,
+                               "prompt_len": len(req.prompt),
+                               "adapter_uid": req.adapter_uid})
         return req.req_id
 
     # ------------------------------------------------------------------
@@ -395,6 +414,16 @@ class Engine:
             else:
                 self.runner.reset_live(req.run_slot)
 
+        # cache-reuse ledger: one row per SUCCESSFUL admission (the
+        # aLoRA switch boundary) — tokens the cache served vs the
+        # remainder prefill recomputes, under the adapter the request
+        # runs as.  Bail paths above returned their blocks and record
+        # nothing.
+        if self.tracer.enabled:
+            self.tracer.ledger_entry(req.req_id, req.adapter_uid, n_reuse,
+                                     n_prompt - n_reuse, req.state_reused,
+                                     self.clock)
+
         # embeddings + (whisper) encoder KV.  Kept host-side (numpy) so
         # the mixed-batch assembly packs rows without device round-trips
         # (the one admission-time sync happens inside build_input_embeds,
@@ -460,6 +489,8 @@ class Engine:
         t_before = self.clock
         prev = self._inflight
         self._inflight = None
+        tr = self.tracer
+        t_sched0 = time.perf_counter()
 
         # ---- schedule ------------------------------------------------
         # decode first: running requests claim their next block BEFORE
@@ -493,18 +524,37 @@ class Engine:
                                 + self._budget_debt
                                 - self.ecfg.max_batched_tokens)
         self.last_step_tokens = (n_decode, n_prefill)
+        if tr.enabled:
+            tr.span("schedule", "schedule", t_sched0,
+                    time.perf_counter(), self.clock,
+                    {"n_decode": n_decode, "n_prefill": n_prefill,
+                     "running": len(self.running),
+                     "waiting": len(self.waiting)})
+            tr.count("steps_total")
+            tr.count("decode_tokens_total", n_decode)
+            tr.count("prefill_tokens_total", n_prefill)
 
         # ---- submit --------------------------------------------------
         if self.use_mixed:
+            t_sub0 = time.perf_counter()
+            asm0 = self.t_assembly + self.runner.t_assembly
             inflight = self._submit_mixed(decodes, prefills)
+            if tr.enabled and inflight is not None:
+                # covers host-side batch assembly (HostBufferPool take +
+                # pack, runner _dev_meta staging) AND the jitted dispatch
+                tr.span("submit", "submit", t_sub0, time.perf_counter(),
+                        self.clock,
+                        {"n_decode": n_decode, "n_prefill": n_prefill,
+                         "t_assembly": self.t_assembly
+                         + self.runner.t_assembly - asm0})
             if inflight is not None and prev is not None:
                 self.async_overlap_steps += 1
             if not self.use_async and inflight is not None:
                 # synchronous oracle: retire the step we just submitted
-                self._retire(inflight)
+                self._retire_traced(inflight)
                 inflight = None
             # ---- retire (async: AFTER step N+1 is in flight) --------
-            self._retire(prev)
+            self._retire_traced(prev)
             self._inflight = inflight
         else:
             self._execute_decodes(decodes)
@@ -555,6 +605,10 @@ class Engine:
         self.running.remove(r)
         self.waiting.insert(0, r)
         self.preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.event("schedule", "preempt", self.clock,
+                              {"req_id": r.req_id})
+            self.tracer.count("preemptions_total")
         if self.preemptions > 1000:
             raise RuntimeError("preemption livelock: pool too small for "
                                "a single request")
@@ -898,6 +952,18 @@ class Engine:
         return _InflightStep(handle=handle, retires=retires)
 
     # ------------------------------------------------------------------
+    def _retire_traced(self, inf: Optional[_InflightStep]) -> None:
+        """``_retire`` wrapped in the retire-phase trace span (covers
+        the one sanctioned D2H sync + the deferred bookkeeping)."""
+        if inf is None:
+            return
+        t0 = time.perf_counter()
+        self._retire(inf)
+        if self.tracer.enabled:
+            self.tracer.span("retire", "retire", t0, time.perf_counter(),
+                             self.clock, {"rows": len(inf.retires)})
+
+    # ------------------------------------------------------------------
     def _retire(self, inf: Optional[_InflightStep]) -> None:
         """Retire a submitted step: the one blocking device→host sync
         per iteration (the (R,) int32 sampled ids), then the deferred
@@ -1012,6 +1078,12 @@ class Engine:
                          or r.output_tokens[-1] != PENDING):
                 r.state = State.DONE
                 r.t_done = self.clock
+                if self.tracer.enabled:
+                    self.tracer.request_summary(
+                        r.req_id, r.adapter_uid, r.arrival_time,
+                        r.t_prefill_start, r.t_decode_start, r.t_done,
+                        len(r.prompt), len(r.output_tokens),
+                        r.n_cache_hit_tokens)
                 if self.kv_mgr is not None:
                     self.kv_mgr.release_all(r.block_ids)
                 if r.run_slot >= 0:

@@ -49,6 +49,7 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.alora import AdapterSpec
+from repro.obs.tracer import Tracer
 from repro.serving.engine import Engine
 from repro.serving.metrics import MetricsAggregate, merge_aggregates
 from repro.serving.request import Request
@@ -87,6 +88,14 @@ class Router:
                 f"{POLICIES}")
         self.replicas: List[Engine] = list(replicas)
         self.policy = policy
+        # fleet tracing: stamp each replica's tracer with its fleet
+        # position (per-replica Perfetto tracks) and keep a router-own
+        # tracer (replica=-1 → the "router" process) for placement
+        # decisions; export via repro.obs.export over
+        # [*(eng.tracer for eng in replicas), router.tracer]
+        self.tracer = Tracer(replica=-1)
+        for i, eng in enumerate(self.replicas):
+            eng.tracer.set_replica(i)
         self._stopped = [False] * len(self.replicas)
         self._rr_next = 0
         self._next_id = 0
@@ -198,6 +207,14 @@ class Router:
         self.placements.append(Placement(
             req_id=gid, replica=idx, cached_tokens=cached,
             adapter_resident=resident, via_session=via_session))
+        if self.tracer.enabled:
+            self.tracer.event("router", "placement", None,
+                              {"req_id": gid, "replica": idx,
+                               "cached_tokens": cached,
+                               "adapter_resident": resident,
+                               "via_session": via_session})
+            self.tracer.count("placements_total")
+            self.tracer.count(f"placements_replica_{idx}_total")
         return gid
 
     # ------------------------------------------------------------------
@@ -246,6 +263,11 @@ class Router:
             if gid is not None:
                 self._routes[gid] = (new_idx, local)
             self.reroutes += 1
+        if self.tracer.enabled:
+            self.tracer.event("router", "stop_replica", None,
+                              {"replica": idx,
+                               "rerouted": len(displaced)})
+            self.tracer.count("reroutes_total", len(displaced))
         return len(displaced)
 
     # ------------------------------------------------------------------

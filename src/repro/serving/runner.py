@@ -71,6 +71,7 @@ from repro.models import layers as Lyr
 from repro.models import model as M
 from repro.models import ssm as ssm_lib
 from repro.models.model import Runtime
+from repro.obs.tracer import Tracer
 
 NEG_INF = -1e30
 
@@ -90,7 +91,7 @@ D2H_LOG_KEEP = 2048
 
 
 def log_d2h(log: List[Tuple[int, str, str]], elems: int, dtype: str,
-            tag: str) -> None:
+            tag: str, tracer: Optional[Tracer] = None) -> None:
     """Record one blocking device→host transfer as ``(elems, dtype, tag)``.
 
     Every host sync on the serving path must route through this logger —
@@ -104,10 +105,20 @@ def log_d2h(log: List[Tuple[int, str, str]], elems: int, dtype: str,
 
     Overflow trims in bulk, keeping the most recent ``D2H_LOG_KEEP``
     entries in order (unit-tested in ``tests/test_analysis.py``).
+
+    ``tracer`` (the runner's, when tracing is on) mirrors the transfer
+    into the unified trace: a "d2h" event on the retire track plus
+    per-tag element/transfer counters — the log and the trace stay one
+    source of truth for the ids-only-D2H invariant.
     """
     if len(log) >= D2H_LOG_MAX:
         del log[:len(log) - D2H_LOG_KEEP]
     log.append((elems, dtype, tag))
+    if tracer is not None and tracer.enabled:
+        tracer.event("retire", "d2h", None,
+                     {"elems": elems, "dtype": dtype, "tag": tag})
+        tracer.count(f"d2h_{tag}_transfers_total")
+        tracer.count(f"d2h_{tag}_elems_total", elems)
 
 
 @dataclass(frozen=True)
@@ -569,7 +580,8 @@ class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, rcfg: RunnerConfig,
                  adapter_layers: Optional[List[Any]] = None,
                  rt: Runtime = Runtime(),
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 tracer: Optional[Tracer] = None):
         """``adapter_layers``: per-layer stacked adapter pytrees (leaves
         with a leading slot axis) — normally the AdapterPool's live
         ``layers`` list, whose entries the pool replaces in place as
@@ -661,6 +673,10 @@ class ModelRunner:
         # D2H payload is the sampled int32 ids, never the (R, vocab)
         # logits; see ``log_d2h`` for the tag vocabulary
         self.d2h_fetches: List[Tuple[int, str, str]] = []
+        # trace recorder shared with the owning engine (a disabled one
+        # when constructed standalone) — log_d2h mirrors into it
+        self.tracer = tracer if tracer is not None \
+            else Tracer(enabled=False)
 
         # per-layer adapter stacks aligned with layer order (the shared
         # AdapterPool list, or inert Nones for adapter-free engines)
@@ -749,7 +765,8 @@ class ModelRunner:
         never per step, and is logged under the "admit" tag."""
         emb = np.asarray(  # hotpath: sync-ok (once per admission)
             self.embed_tokens(np.array(prompt, np.int32)))
-        log_d2h(self.d2h_fetches, int(emb.size), str(emb.dtype), "admit")
+        log_d2h(self.d2h_fetches, int(emb.size), str(emb.dtype), "admit",
+                self.tracer)
         if prefix_embeds is not None:
             pe = prefix_embeds.astype(emb.dtype, copy=False)
             # hashing pseudo-tokens already cover the patch prefix; the
@@ -901,7 +918,7 @@ class ModelRunner:
         device→host transfer (a few bytes per request, never the full
         logits).  Retire-phase: the blocking sync is allowed here."""
         log_d2h(self.d2h_fetches, int(handle.sampled.size),
-                str(np.dtype(handle.sampled.dtype)), "step")
+                str(np.dtype(handle.sampled.dtype)), "step", self.tracer)
         return np.asarray(handle.sampled)[:handle.n_requests]
 
     def execute_batch(self, mb: MixedBatch):
@@ -934,7 +951,7 @@ class ModelRunner:
             xk[:, i] = np.asarray(k_)  # hotpath: sync-ok (membership miss)
             xv[:, i] = np.asarray(v_)  # hotpath: sync-ok (membership miss)
         log_d2h(self.d2h_fetches, int(xk.size + xv.size), str(xk.dtype),
-                "xkv")
+                "xkv", self.tracer)
         stacked = (self._dev(xk), self._dev(xv))
         self._xkv_stack = (key, stacked)
         return stacked

@@ -348,6 +348,39 @@ def test_lint_phase_table_honesty(tmp_path):
     assert "_gone_with_refactor" in vs[0].message
 
 
+def test_lint_obs_clean_tracer_passes(tmp_path):
+    """Plain-python append-only recording (the Tracer shape) passes the
+    wholesale B4 check — os/time/dict/list work is exactly what the
+    hot path may do."""
+    obs = ("import time\n"
+           "class Tracer:\n"
+           "    def event(self, track, name):\n"
+           "        t = time.perf_counter()\n"
+           "        self.events.append((track, name, t))\n")
+    vs = lint_files([_write(tmp_path, "good.py", GOOD_SRC)],
+                    obs_paths=(_write(tmp_path, "tracer.py", obs),),
+                    **FIXTURE_KW)
+    assert vs == []
+
+
+def test_lint_obs_jax_and_sync_fire_without_annotation_escape(tmp_path):
+    """ANY jax/jnp call or blocking construct in trace-recording code
+    fires B4 — even unreachable from the roots, and even on a line
+    carrying the ``# hotpath: sync-ok`` annotation (no escape hatch in
+    obs files)."""
+    obs = ("import jax.numpy as jnp\n"
+           "class Tracer:\n"
+           "    def event(self, x):\n"
+           "        v = jnp.asarray(x)  # hotpath: sync-ok\n"
+           "        v.block_until_ready()  # hotpath: sync-ok\n"
+           "        self.events.append(v)\n")
+    vs = lint_files([_write(tmp_path, "good.py", GOOD_SRC)],
+                    obs_paths=(_write(tmp_path, "tracer.py", obs),),
+                    **FIXTURE_KW)
+    assert sorted(v.rule for v in vs) == ["obs-jax", "obs-sync"]
+    assert all("Tracer.event" in v.message for v in vs)
+
+
 def test_lint_kernels_checked_even_unreachable(tmp_path):
     kernel = ("import numpy as np\n"
               "def _kernel_body(x):\n"

@@ -10,9 +10,12 @@
 """
 import math
 
+import numpy as np
+
 from benchmarks.common import stage_row
-from repro.serving.metrics import (METRIC_KEYS, MetricsAggregate,
-                                   aggregate, merge_aggregates,
+from repro.serving.metrics import (METRIC_KEYS, RESERVOIR_MAX,
+                                   MetricsAggregate, aggregate,
+                                   fmt_speedups, merge_aggregates,
                                    speedup_table)
 
 
@@ -72,9 +75,27 @@ def test_empty_stage_renders_dashes():
     assert "-" not in s2.replace("hit=0.00", "")
 
 
-def test_speedup_table_tolerates_empty_baseline():
+def test_speedup_table_empty_baseline_is_absent_not_inf():
+    """An empty baseline has no stage means at all — that is 'stage
+    absent' (NaN, rendered '-'), not an infinite speedup."""
     sp = speedup_table(aggregate([]), aggregate([fake_metrics(0.0, 1.0)]))
     assert set(sp)                               # keys present, no raise
+    assert all(math.isnan(v) for v in sp.values())
+    rendered = fmt_speedups(sp)
+    assert "nan" not in rendered and "inf" not in rendered
+    assert "e2e=-" in rendered
+
+
+def test_speedup_table_true_zero_vs_absent():
+    """inf is reserved for a measured zero in ours against a positive
+    baseline; 0/0 is a 1.0 no-op; a missing key on either side is NaN."""
+    b = MetricsAggregate(1, {"e2e": 2.0, "ttft": 0.0}, {}, {}, 0.0)
+    o = MetricsAggregate(1, {"e2e": 0.0, "ttft": 0.0}, {}, {}, 0.0)
+    sp = speedup_table(b, o, keys=("e2e", "ttft", "queue"))
+    assert sp["e2e"] == float("inf")             # true zero, positive base
+    assert sp["ttft"] == 1.0                     # 0/0 no-op
+    assert math.isnan(sp["queue"])               # absent on both sides
+    assert "queue=-" in fmt_speedups(sp)
 
 
 def test_row_default_construction_keeps_field_order():
@@ -131,6 +152,52 @@ def test_merge_single_and_empty_parts():
     assert merge_aggregates([a, aggregate([])]) is a
     m = merge_aggregates([aggregate([]), aggregate([])])
     assert m.n == 0 and m.throughput_tok_per_s == 0.0
+
+
+def test_merge_percentiles_exact_from_reservoirs():
+    """Parts with DIFFERENT distributions: the merged p50/p99 must be
+    the percentile of the pooled per-request values, not the n-weighted
+    mean of per-part percentiles (which is only right for identically
+    distributed parts)."""
+    a = aggregate([fake_metrics(0.0, d) for d in (1.0, 2.0, 3.0)])
+    b = aggregate([fake_metrics(0.0, d) for d in (10.0, 20.0, 30.0,
+                                                  40.0, 50.0)])
+    m = merge_aggregates([a, b])
+    pooled = np.array([1.0, 2.0, 3.0, 10.0, 20.0, 30.0, 40.0, 50.0])
+    assert math.isclose(m.p50["e2e"], float(np.percentile(pooled, 50)))
+    assert math.isclose(m.p99["e2e"], float(np.percentile(pooled, 99)))
+    # the old approximation would have reported something else
+    approx = (a.p50["e2e"] * a.n + b.p50["e2e"] * b.n) / (a.n + b.n)
+    assert not math.isclose(m.p50["e2e"], approx)
+    # the merged aggregate still fits the reservoir → chained merges
+    # stay exact as well
+    assert m.samples is not None and len(m.samples["e2e"]) == m.n
+    c = aggregate([fake_metrics(0.0, 100.0)])
+    m2 = merge_aggregates([m, c])
+    pooled2 = np.append(pooled, 100.0)
+    assert math.isclose(m2.p50["e2e"], float(np.percentile(pooled2, 50)))
+
+
+def test_merge_percentiles_fall_back_without_samples():
+    """A part that reduced away its raw values (hand-built aggregate,
+    samples=None) downgrades the merge to the n-weighted approximation
+    instead of crashing or silently pretending exactness."""
+    a = aggregate([fake_metrics(0.0, 2.0)] * 2)
+    b = MetricsAggregate(
+        2, dict.fromkeys(METRIC_KEYS, 1.0), dict.fromkeys(METRIC_KEYS, 1.0),
+        dict.fromkeys(METRIC_KEYS, 1.0), 0.0, total_tokens=100,
+        total_e2e=2.0)
+    m = merge_aggregates([a, b])
+    assert math.isclose(m.p50["e2e"], (a.p50["e2e"] * 2 + 1.0 * 2) / 4)
+    assert m.samples is None                     # inexact → no reservoir
+
+
+def test_reservoir_is_bounded():
+    """aggregate() never stores more than RESERVOIR_MAX raw values per
+    metric; an over-full part makes merges fall back (len < n)."""
+    recs = [fake_metrics(0.0, 1.0)] * (RESERVOIR_MAX + 5)
+    a = aggregate(recs)
+    assert len(a.samples["e2e"]) == RESERVOIR_MAX < a.n
 
 
 def test_merge_without_endpoints_falls_back():
