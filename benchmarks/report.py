@@ -116,6 +116,27 @@ def adapter_pool_table(recs):
               f"{r['occupancy_mean']:.2f} |")
 
 
+def adapter_sched_table(recs):
+    """Admission-scheduling comparison from the Zipf thousand-adapter
+    leg (``bench_multi_adapter.py --zipf`` appends one record per
+    policy): the adapter-affinity scheduler vs the strict-FCFS oracle
+    on the same trace.  Queue wait is in scheduler steps (deterministic
+    on the fixed trace); acquire-fails/stalls/installs are the
+    slot-contention failure modes affinity admission exists to avoid."""
+    print("\n### Admission scheduling — affinity vs FCFS (Zipf trace)\n")
+    print("| arch | policy | adapters | requests | steps | "
+          "queue wait (steps) | acquire fails | stalls | installs | "
+          "evictions | staged dropped |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["policy"])):
+        print(f"| {r['arch']} | {r['policy']} | "
+              f"{r['n_adapters']} | {r['n_requests']} | {r['steps']} | "
+              f"{r['queue_wait_steps_mean']:.1f} | "
+              f"{r['acquire_fails']:.0f} | {r['stalled_installs']:.0f} | "
+              f"{r['installs']:.0f} | {r['evictions']:.0f} | "
+              f"{r['staged_dropped']:.0f} |")
+
+
 def sharded_step_table(recs):
     """TP-sharded mixed-step runs (``bench_mixed_batch.py --mesh …``
     appends one record per run).  Latency vs the single-device mixed
@@ -262,6 +283,14 @@ def main():
         for r in pool:
             latest[(r["arch"], r["smoke"])] = r
         adapter_pool_table(list(latest.values()))
+    sched = load(os.path.join(BASE, "adapter_sched.jsonl"))
+    if sched:
+        # append-mode artifact: last record per (arch, policy, smoke)
+        # wins
+        latest = {}
+        for r in sched:
+            latest[(r["arch"], r["policy"], r["smoke"])] = r
+        adapter_sched_table(list(latest.values()))
     sharded = load(os.path.join(BASE, "sharded_step.jsonl"))
     if sharded:
         # append-mode artifact: last record per

@@ -102,6 +102,7 @@ ROOTS: Tuple[Tuple[str, str], ...] = (
     ("Engine", "cached_prefix_tokens"),
     ("Engine", "outstanding_tokens"),
     ("Engine", "adapter_residency"),
+    ("Engine", "adapter_affinity"),
 )
 
 

@@ -41,6 +41,15 @@ Per-registration state machine
   **async** (JAX dispatch); by the time the request is admitted and its
   first mixed step runs, the H2D copy has overlapped with host-side
   scheduling — adapter churn never blocks the one-call-per-step path.
+  Staged-but-not-installed weights live in a **bounded staging tier**:
+  at most ``staging_budget`` registrations may hold a device staging
+  copy at once (a prefetch past the budget is deferred, never a second
+  resident-sized HBM bill), and a stage that no admission ever claims
+  expires after ``staging_ttl`` scheduler ticks — a prefetch issued for
+  a request that is cancelled, drained or routed to another replica can
+  no longer pin a full weight copy in HBM forever.  ``tick()`` (called
+  once per engine step) drives the expiry clock; every refreshing
+  ``prefetch`` call resets a stage's age.
 * ``acquire(uid)`` — at admission: pins the adapter's slot (ref count),
   installing it first if not resident (allocating a free slot or
   evicting the least-recently-used *unpinned* one).  The install
@@ -65,7 +74,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -122,8 +131,14 @@ class AdapterPool:
 
     def __init__(self, cfg: ModelConfig, *, num_slots: int, slot_rank: int,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 staging_budget: Optional[int] = None,
+                 staging_ttl: int = 64,
+                 evict_policy: Optional[
+                     Callable[[Sequence[str]], str]] = None):
         assert num_slots >= 1 and slot_rank >= 1
+        assert staging_budget is None or staging_budget >= 1
+        assert staging_ttl >= 1
         self.cfg = cfg
         # trace recorder shared with the owning engine (adapter-lifecycle
         # events land on the "pool" track); a disabled one standalone
@@ -169,6 +184,19 @@ class AdapterPool:
         self._free: List[int] = list(range(1, num_slots + 1))
         # residency recency: uid -> None, least-recently-acquired first
         self._lru: "OrderedDict[str, None]" = OrderedDict()
+        # slot eviction policy hook: given the unpinned resident uids in
+        # least-recently-acquired-first order, returns the victim uid.
+        # None = LRU (take the first candidate).
+        self.evict_policy = evict_policy
+        # staging tier: uid -> last-touched tick for every registration
+        # currently holding a device staging copy (reg.device_layers).
+        # Bounded by staging_budget; entries untouched for > staging_ttl
+        # ticks are dropped by tick().
+        self.staging_budget = (staging_budget if staging_budget is not None
+                               else num_slots)
+        self.staging_ttl = staging_ttl
+        self._staged: "OrderedDict[str, int]" = OrderedDict()
+        self._tick = 0
         # lifecycle counters (AdapterPoolStats)
         self.prefetch_issued = 0
         self.prefetch_hits = 0
@@ -177,6 +205,8 @@ class AdapterPool:
         self.evictions = 0
         self.acquire_fails = 0
         self.stalled_installs = 0
+        self.staged_dropped = 0
+        self.prefetch_deferred = 0
 
     # ------------------------------------------------------------------
     # registry
@@ -216,6 +246,8 @@ class AdapterPool:
         if reg.pins:
             raise RuntimeError(f"adapter {uid} still pinned by "
                                f"{reg.pins} running request(s)")
+        if reg.device_layers is not None:
+            self._drop_stage(uid, "unregister")
         del self._by_name[name]
         del self._by_uid[uid]
         if reg.slot is not None:
@@ -235,14 +267,37 @@ class AdapterPool:
     # ------------------------------------------------------------------
     # residency
     # ------------------------------------------------------------------
-    def prefetch(self, uid: str) -> None:
+    def prefetch(self, uid: str) -> bool:
         """Issue the async host→device transfer ahead of admission.
-        Idempotent: a no-op while the weights are already staged or
-        resident (the scheduler re-calls this every step for queued
-        requests)."""
+        Idempotent: refreshes the stage's TTL while the weights are
+        already staged (the scheduler re-calls this every step for
+        queued requests), a no-op while resident.  Returns ``False``
+        when the staging tier is at its budget and the transfer was
+        deferred — the scheduler simply retries next step, by which
+        time an install or expiry may have freed a stage."""
         reg = self._by_uid[uid]
-        if reg.slot is not None or reg.device_layers is not None:
-            return
+        if reg.slot is not None:
+            return True
+        if reg.device_layers is not None:
+            self._staged[uid] = self._tick          # refresh TTL
+            self._staged.move_to_end(uid)
+            return True
+        if len(self._staged) >= self.staging_budget:
+            self.prefetch_deferred += 1
+            if self.tracer.enabled:
+                self.tracer.event("pool", "prefetch_deferred", None,
+                                  {"uid": uid})
+                self.tracer.count("adapter_prefetch_deferred_total")
+            return False
+        self._stage(reg)
+        self.prefetch_issued += 1
+        if self.tracer.enabled:
+            self.tracer.event("pool", "prefetch", None, {"uid": uid})
+            self.tracer.count("adapter_prefetch_total")
+        return True
+
+    def _stage(self, reg: AdapterRegistration) -> None:
+        """Device-put ``reg``'s host weights into the staging tier."""
         if self._weight_shardings is not None:
             # sharded pool: stage the weights directly in the slot-stack
             # layout (A replicated, B column-parallel) so the install
@@ -253,10 +308,31 @@ class AdapterPool:
         else:
             reg.device_layers = [jax.tree.map(jax.device_put, lw)
                                  for lw in reg.host_layers]
-        self.prefetch_issued += 1
+        self._staged[reg.uid] = self._tick
+        self._staged.move_to_end(reg.uid)
+
+    def tick(self) -> None:
+        """Advance the staging clock one scheduler step and expire
+        stages nothing claimed for ``staging_ttl`` ticks — the fix for
+        the prefetch leak where a stage issued for a request that never
+        admits (cancelled, drained, routed to another replica) pinned a
+        full weight copy in HBM forever."""
+        self._tick += 1
+        expired = [uid for uid, touched in self._staged.items()
+                   if self._tick - touched > self.staging_ttl]
+        for uid in expired:
+            self._drop_stage(uid, "expired")
+
+    def _drop_stage(self, uid: str, reason: str) -> None:
+        reg = self._by_uid.get(uid)
+        if reg is not None:
+            reg.device_layers = None
+        self._staged.pop(uid, None)
+        self.staged_dropped += 1
         if self.tracer.enabled:
-            self.tracer.event("pool", "prefetch", None, {"uid": uid})
-            self.tracer.count("adapter_prefetch_total")
+            self.tracer.event("pool", "stage_drop", None,
+                              {"uid": uid, "reason": reason})
+            self.tracer.count("adapter_staged_dropped_total")
 
     def acquire(self, uid: str) -> Optional[int]:
         """Pin ``uid``'s slot for a scheduled request, installing it
@@ -273,14 +349,17 @@ class AdapterPool:
                     self.tracer.count("adapter_acquire_fails_total")
                 return None
             if reg.device_layers is None:
-                # weights were never prefetched — the H2D copy is issued
-                # here, on the admission path (still async, but without
-                # the queue-time head start)
+                # weights were never prefetched (or the prefetch was
+                # deferred at the staging budget) — the H2D copy is
+                # issued here, on the admission path (still async, but
+                # without the queue-time head start).  Staged directly,
+                # bypassing the budget: the install below claims the
+                # copy in the same call, so it never lingers.
                 self.stalled_installs += 1
                 if self.tracer.enabled:
                     self.tracer.event("pool", "stall", None, {"uid": uid})
                     self.tracer.count("adapter_stalls_total")
-                self.prefetch(uid)
+                self._stage(reg)
             else:
                 self.prefetch_hits += 1      # install found staged weights
             self._install(reg, slot)
@@ -300,18 +379,26 @@ class AdapterPool:
     def _take_slot(self) -> Optional[int]:
         if self._free:
             return self._free.pop()
-        for uid in self._lru:                # least recently acquired first
-            victim = self._by_uid[uid]
-            if victim.pins == 0:
-                self._lru.pop(uid)
-                slot, victim.slot = victim.slot, None
-                self.evictions += 1
-                if self.tracer.enabled:
-                    self.tracer.event("pool", "evict", None,
-                                      {"uid": uid, "slot": slot})
-                    self.tracer.count("adapter_evictions_total")
-                return slot
-        return None
+        # unpinned resident adapters, least recently acquired first
+        candidates = [uid for uid in self._lru
+                      if self._by_uid[uid].pins == 0]
+        if not candidates:
+            return None
+        if self.evict_policy is None:
+            uid = candidates[0]              # LRU
+        else:
+            uid = self.evict_policy(candidates)
+            assert uid in candidates, \
+                f"evict_policy returned non-candidate {uid!r}"
+        victim = self._by_uid[uid]
+        self._lru.pop(uid)
+        slot, victim.slot = victim.slot, None
+        self.evictions += 1
+        if self.tracer.enabled:
+            self.tracer.event("pool", "evict", None,
+                              {"uid": uid, "slot": slot})
+            self.tracer.count("adapter_evictions_total")
+        return slot
 
     def _install(self, reg: AdapterRegistration, slot: int) -> None:
         s = jnp.asarray(slot, jnp.int32)
@@ -327,6 +414,7 @@ class AdapterPool:
         # the staging copy has been scattered into the slot stack; drop
         # it so residency costs one copy of the weights, not two
         reg.device_layers = None
+        self._staged.pop(reg.uid, None)      # claimed, not leaked
         reg.slot = slot
         self.installs += 1
         if self.tracer.enabled:
@@ -353,6 +441,39 @@ class AdapterPool:
         return {name: self._by_uid[uid].slot is not None
                 for name, uid in self._by_name.items()}
 
+    def affinity_of(self, uid: str) -> int:
+        """Admission-affinity class of a registration: ``2`` resident
+        (slot installed — acquire is a pin), ``1`` staged (weights on
+        device awaiting install), ``0`` host-only (acquire stalls on
+        the H2D copy).  The admission scheduler's ordering key and,
+        name-resolved via :meth:`affinity`, the router's placement
+        signal."""
+        reg = self._by_uid[uid]
+        if reg.slot is not None:
+            return 2
+        if reg.device_layers is not None:
+            return 1
+        return 0
+
+    def affinity(self, name: str) -> int:
+        """Name-keyed :meth:`affinity_of` (0 for unknown names)."""
+        uid = self._by_name.get(name)
+        return 0 if uid is None else self.affinity_of(uid)
+
+    def can_take_slot(self) -> bool:
+        """Would :meth:`_take_slot` succeed right now — a free slot, or
+        an unpinned resident victim?  The admission scheduler's cheap
+        gate: a non-resident candidate is skipped without issuing a
+        doomed acquire (which would count an ``acquire_fails`` per scan
+        for a failure the scheduler can already see)."""
+        return bool(self._free) or any(
+            self._by_uid[uid].pins == 0 for uid in self._lru)
+
+    @property
+    def staged_now(self) -> int:
+        """Registrations currently holding a device staging copy."""
+        return len(self._staged)
+
     def stats(self) -> AdapterPoolStats:
         return AdapterPoolStats(
             num_slots=self.num_slots,
@@ -365,4 +486,7 @@ class AdapterPool:
             evictions=self.evictions,
             acquire_fails=self.acquire_fails,
             stalled_installs=self.stalled_installs,
+            staged_now=self.staged_now,
+            staged_dropped=self.staged_dropped,
+            prefetch_deferred=self.prefetch_deferred,
         )

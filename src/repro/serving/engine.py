@@ -40,8 +40,10 @@ the per-step device→host payload is a handful of int32 ids instead of
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from itertools import islice
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -113,6 +115,35 @@ class EngineConfig:
     # the largest construction-time adapter rank (min 8).  Must be set
     # explicitly if later registrations need a higher rank.
     adapter_slot_rank: Optional[int] = None
+    # ---- adapter-aware admission (docs/scheduling.md) ----------------
+    # "affinity" (default): scan a bounded window of the waiting queue,
+    # skip requests blocked on slots/blocks, and admit base-model /
+    # resident-adapter / staged-adapter requests first (same-adapter
+    # admissions batched), under the starvation-age cap below.  "fcfs":
+    # strict queue order with head-of-line break — the equivalence
+    # oracle (and the pre-scheduler behaviour).  Admission order never
+    # changes any request's tokens (greedy decoding is per-request
+    # deterministic; the mixed≡sequential suites prove batch-composition
+    # independence) — only queueing latency.
+    admission_policy: str = "affinity"
+    # how deep into `waiting` the affinity scan and the prefetch pass
+    # look each step
+    admission_window: int = 32
+    # starvation-age cap K: once a scanned-but-bypassed request has been
+    # overtaken by younger admissions in K scans, it becomes a barrier —
+    # nothing behind it in the queue admits before it does
+    admission_starvation_cap: int = 8
+    # ---- adapter staging tier (AdapterPool) --------------------------
+    # max registrations holding a device staging copy at once (prefetch
+    # past it is deferred, not dropped).  None -> one per adapter slot.
+    adapter_staging_budget: Optional[int] = None
+    # scheduler ticks until a staged-but-never-claimed copy expires —
+    # the bound on the prefetch-leak window
+    adapter_staging_ttl: int = 64
+    # slot eviction-policy hook forwarded to AdapterPool: given the
+    # unpinned resident uids (least-recently-acquired first), returns
+    # the victim uid.  None = LRU.
+    adapter_evict_policy: Optional[Callable[[Sequence[str]], str]] = None
     # ---- async step pipeline (schedule → submit → retire) ------------
     # True (default): one-step-lookahead submission.  Sampling runs on
     # device inside the mixed step, only the (R,) int32 sampled ids ever
@@ -187,10 +218,12 @@ class Engine:
                 if engine_cfg.adapter_slot_rank is not None \
                 else rank_bucket(max((s.rank for s, _ in adapters),
                                      default=1))
-            self.adapter_pool = AdapterPool(cfg, num_slots=n_slots,
-                                            slot_rank=slot_rank,
-                                            mesh=engine_cfg.mesh,
-                                            tracer=self.tracer)
+            self.adapter_pool = AdapterPool(
+                cfg, num_slots=n_slots, slot_rank=slot_rank,
+                mesh=engine_cfg.mesh, tracer=self.tracer,
+                staging_budget=engine_cfg.adapter_staging_budget,
+                staging_ttl=engine_cfg.adapter_staging_ttl,
+                evict_policy=engine_cfg.adapter_evict_policy)
             for spec, w in adapters:
                 self.adapter_pool.register(spec, w)
 
@@ -223,8 +256,11 @@ class Engine:
 
         self.clock = 0.0
         self._next_id = 0
-        self.pending: List[Request] = []      # future arrivals (sorted)
-        self.waiting: List[Request] = []      # arrived, not yet admitted
+        # deques: arrivals pop from the left every step and preemption
+        # pushes to the front — with the admission-window scan these
+        # queues are hot at depth, and list.pop(0) is O(n)
+        self.pending: "deque[Request]" = deque()   # future arrivals (sorted)
+        self.waiting: "deque[Request]" = deque()   # arrived, not admitted
         self.running: List[Request] = []      # prefill/decode in flight
         self.done: List[Request] = []
         self._free_slots = list(range(engine_cfg.max_running))
@@ -237,6 +273,15 @@ class Engine:
             raise ValueError(
                 f"unknown execution_mode {engine_cfg.execution_mode!r}: "
                 "expected 'mixed' or 'sequential'")
+        if engine_cfg.admission_policy not in ("affinity", "fcfs"):
+            raise ValueError(
+                f"unknown admission_policy "
+                f"{engine_cfg.admission_policy!r}: "
+                "expected 'affinity' or 'fcfs'")
+        if engine_cfg.admission_window < 1 \
+                or engine_cfg.admission_starvation_cap < 1:
+            raise ValueError("admission_window and "
+                             "admission_starvation_cap must be >= 1")
         self.use_mixed = engine_cfg.execution_mode == "mixed"
         self.use_async = self.use_mixed and engine_cfg.async_submission
         self._inflight: Optional[_InflightStep] = None
@@ -322,7 +367,10 @@ class Engine:
             self.waiting.append(req)
         else:
             self.pending.append(req)
-            self.pending.sort(key=lambda r: r.arrival_time)
+            if len(self.pending) > 1 \
+                    and req.arrival_time < self.pending[-2].arrival_time:
+                self.pending = deque(sorted(
+                    self.pending, key=lambda r: r.arrival_time))
         if self.tracer.enabled:
             self.tracer.event("lifecycle", "arrival", req.arrival_time,
                               {"req_id": req.req_id,
@@ -439,6 +487,90 @@ class Engine:
         return True
 
     # ------------------------------------------------------------------
+    # adapter-aware admission (EngineConfig.admission_policy="affinity")
+    # ------------------------------------------------------------------
+    def _affinity_class(self, r: Request) -> int:
+        """Admission-readiness class: 2 = no install needed (base-model
+        request, or adapter already resident in a slot), 1 = weights
+        staged on device (install is a local scatter), 0 = host-only
+        (install stalls on the H2D copy)."""
+        if r.adapter_uid is None:
+            return 2
+        return self.adapter_pool.affinity_of(r.adapter_uid)
+
+    def _admit_affinity(self) -> None:
+        """Windowed adapter-affinity admission (docs/scheduling.md).
+
+        Strict FCFS breaks on the first inadmissible request, so a head
+        blocked on a pinned adapter slot starves everything behind it —
+        including base-model requests and requests whose adapter is
+        already resident.  This scan looks at the first
+        ``admission_window`` waiting requests, tries them in affinity
+        order (no-install first, staged next, host-only last; equal
+        classes keep queue order, same-adapter requests adjacent so
+        their admissions batch), and skips — rather than breaks on —
+        any that fail on slots/blocks.
+
+        Starvation-age cap: a scanned request bypassed by a younger
+        admission bumps ``admission_skips``; once that reaches
+        ``admission_starvation_cap`` the request is a *barrier* — the
+        candidate set is truncated at the oldest capped request, so
+        nothing behind it in the queue can be admitted before it.  The
+        capped request's counter can then never advance again: the cap
+        is the exact bound on how often any request is bypassed.
+        Admission order never alters decoded tokens (greedy decoding is
+        per-request deterministic; batch-composition independence is
+        proven by the mixed≡sequential suites) — only queue latency.
+        """
+        ecfg = self.ecfg
+        if not self.waiting or len(self.running) >= ecfg.max_running:
+            return
+        window = list(islice(self.waiting, ecfg.admission_window))
+        barrier = len(window) - 1
+        for i, r in enumerate(window):
+            if r.admission_skips >= ecfg.admission_starvation_cap:
+                barrier = i
+                break
+        candidates = window[:barrier + 1]
+        # affinity class desc; within a class, group by adapter uid
+        # (base model first) then queue order — stable and deterministic
+        order = sorted(
+            range(len(candidates)),
+            key=lambda i: (-self._affinity_class(candidates[i]),
+                           candidates[i].adapter_uid or "", i))
+        admitted: List[int] = []
+        for i in order:
+            if len(self.running) >= ecfg.max_running:
+                break
+            r = candidates[i]
+            # a candidate that needs a slot install is skipped outright
+            # while no slot is free or evictable — unlike the FCFS
+            # oracle, the scan never issues an acquire it can already
+            # see failing (this is most of the acquire_fails win)
+            if r.adapter_uid is not None and self._affinity_class(r) < 2 \
+                    and not self.adapter_pool.can_take_slot():
+                continue
+            if self._try_admit(r):
+                admitted.append(i)
+        if not admitted:
+            return                # nothing admitted -> nobody bypassed
+        admitted_ids = {id(candidates[i]) for i in admitted}
+        # a request is bypassed when a YOUNGER (deeper-queued) request
+        # admitted this scan; an older one admitting does not count
+        youngest = max(admitted)
+        n_skips = 0
+        for i, r in enumerate(candidates):
+            if i < youngest and id(r) not in admitted_ids:
+                r.admission_skips += 1
+                n_skips += 1
+        # (admissions_total itself is stamped per ledger row in
+        # _try_admit — only the skip accounting is scan-level)
+        if self.tracer.enabled and n_skips:
+            self.tracer.count("admission_skips_total", n_skips)
+        self.waiting = deque(r for r in self.waiting
+                             if id(r) not in admitted_ids)
+
+    # ------------------------------------------------------------------
     # one scheduler step
     # ------------------------------------------------------------------
     def step(self) -> float:
@@ -469,14 +601,21 @@ class Engine:
         """
         # move due arrivals into the waiting queue
         while self.pending and self.pending[0].arrival_time <= self.clock:
-            self.waiting.append(self.pending.pop(0))
+            self.waiting.append(self.pending.popleft())
         # scheduler-driven adapter prefetch: issue the async host→device
         # transfer for every adapter an admission-window request will
         # need, so the weights are staged (or already in flight) by the
-        # time admission pins a slot below
+        # time admission pins a slot below.  The window is the admission
+        # window, NOT spare running capacity: a full engine is exactly
+        # when slots are about to free, and prefetching for the queue
+        # head there is the whole point of the queue-time head start
+        # (the old `max_running - len(running)` window collapsed to zero
+        # under load).  Device cost is bounded by the pool's staging
+        # budget, not the window; tick() first so expired stages free
+        # budget for this step's prefetches.
         if self.adapter_pool is not None:
-            window = max(self.ecfg.max_running - len(self.running), 0)
-            for r in self.waiting[:window]:
+            self.adapter_pool.tick()
+            for r in islice(self.waiting, self.ecfg.admission_window):
                 if r.adapter_uid is not None:
                     self.adapter_pool.prefetch(r.adapter_uid)
         # idle: jump to the next arrival
@@ -500,11 +639,16 @@ class Engine:
         decodes = self._schedule_decodes()
         n_decode = len(decodes)
 
-        # admit FCFS while capacity allows
-        while self.waiting and len(self.running) < self.ecfg.max_running:
-            if not self._try_admit(self.waiting[0]):
-                break
-            self.waiting.pop(0)
+        # admission: adapter-aware windowed scan (default) or the strict
+        # FCFS-with-break oracle (EngineConfig.admission_policy="fcfs")
+        if self.ecfg.admission_policy == "fcfs":
+            while self.waiting \
+                    and len(self.running) < self.ecfg.max_running:
+                if not self._try_admit(self.waiting[0]):
+                    break
+                self.waiting.popleft()
+        else:
+            self._admit_affinity()
 
         # chunked-prefill budget: whatever the decodes left of
         # max_batched_tokens, minus last step's minimum-progress
@@ -603,7 +747,7 @@ class Engine:
         # cross-attention tensors for the engine's lifetime
         self._xkv.pop(r.req_id, None)
         self.running.remove(r)
-        self.waiting.insert(0, r)
+        self.waiting.appendleft(r)
         self.preemptions += 1
         if self.tracer.enabled:
             self.tracer.event("schedule", "preempt", self.clock,
@@ -1179,3 +1323,13 @@ class Engine:
         """Adapter name → device-resident (slot installed) snapshot."""
         pool = self.adapter_pool
         return {} if pool is None else pool.residency()
+
+    def adapter_affinity(self, name: str) -> int:
+        """Adapter-affinity class of ``name`` on this replica: 2 slot-
+        resident (admission is a pin), 1 staged (weights on device
+        awaiting install), 0 host-only or unknown.  The graded version
+        of :meth:`adapter_residency` the router scores placements with —
+        a replica that already staged the weights beats one that must
+        start the H2D copy from scratch."""
+        pool = self.adapter_pool
+        return 0 if pool is None else pool.affinity(name)

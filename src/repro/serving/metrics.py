@@ -185,12 +185,16 @@ class AdapterPoolStats:
     evictions: int = 0            # LRU slot reclaims
     acquire_fails: int = 0        # admissions queued behind eviction
     stalled_installs: int = 0     # installs whose H2D was never prefetched
+    staged_now: int = 0           # staging copies on device right now
+    staged_dropped: int = 0       # stages expired/unregistered unclaimed
+    prefetch_deferred: int = 0    # prefetches refused at the staging budget
 
     def row(self) -> Dict[str, float]:
         return {k: float(getattr(self, k)) for k in (
             "num_slots", "num_registered", "occupancy", "prefetch_issued",
             "prefetch_hits", "resident_hits", "installs", "evictions",
-            "acquire_fails", "stalled_installs")}
+            "acquire_fails", "stalled_installs", "staged_now",
+            "staged_dropped", "prefetch_deferred")}
 
 
 def speedup_table(baseline: MetricsAggregate, ours: MetricsAggregate,

@@ -59,6 +59,11 @@ class Request:
     # scheduled under, and the retire phase drops rows whose epoch no
     # longer matches (their bookkeeping was rolled back by the preempt)
     epoch: int = 0
+    # scans of the affinity admission window in which a YOUNGER request
+    # was admitted past this one; at
+    # EngineConfig.admission_starvation_cap the request becomes an
+    # admission barrier and can never be bypassed again
+    admission_skips: int = 0
     block_ids: List[int] = field(default_factory=list)
     hashes: List[BlockHash] = field(default_factory=list)  # full-block chain
     n_computed: int = 0                     # prompt tokens with KV in cache

@@ -138,15 +138,17 @@ class Router:
     def _score(self, i: int, prompt: Sequence[int],
                adapter_name: Optional[str],
                salt: Tuple) -> Tuple[int, int, int]:
-        """(cached prefix tokens, adapter resident, -outstanding): the
-        affinity ranking, compared lexicographically, max wins."""
+        """(cached prefix tokens, adapter affinity, -outstanding): the
+        affinity ranking, compared lexicographically, max wins.  The
+        adapter term is the graded pool class (2 slot-resident, 1
+        staged, 0 host-only) — a replica that already staged the
+        weights beats one that must start the H2D copy from scratch."""
         eng = self.replicas[i]
         cached = eng.cached_prefix_tokens(prompt, adapter_name, salt)
-        resident = 0
+        affinity = 0
         if adapter_name is not None:
-            resident = int(eng.adapter_residency().get(adapter_name,
-                                                       False))
-        return (cached, resident, -eng.outstanding_tokens())
+            affinity = eng.adapter_affinity(adapter_name)
+        return (cached, affinity, -eng.outstanding_tokens())
 
     def _place(self, prompt: Sequence[int], adapter_name: Optional[str],
                salt: Tuple,

@@ -5,7 +5,10 @@ Covers the subsystem's contract end to end:
     uids, heterogeneous ranks padded into the slot bucket (exactly);
  2. pool mechanics — pin-while-scheduled ref counts, LRU eviction of
     unpinned slots only, acquire failure when everything is pinned,
-    prefetch/install/stall counters;
+    prefetch/install/stall counters; the bounded staging tier (budget
+    deferral, TTL expiry of unclaimed stages, evict-policy hook) and
+    the adapter-aware admission scheduler (blocked-head skip,
+    starvation-age cap, churn + preemption under reordering);
  3. engine equivalence under churn — more adapters registered than
     device slots, interleaved admissions/evictions/readmissions, output
     token-identical to the all-resident sequential oracle;
@@ -210,6 +213,141 @@ class TestPoolMechanics:
 
 
 # ---------------------------------------------------------------------------
+# 2b. staging tier: bounded prefetch, TTL expiry, evict-policy hook
+# ---------------------------------------------------------------------------
+class TestStagingTier:
+    def mk_pool(self, cfg, n_regs=3, num_slots=2, **kw):
+        pool = AdapterPool(cfg, num_slots=num_slots, slot_rank=8, **kw)
+        uids = [pool.register(AdapterSpec(f"a{i}", rank=8),
+                              mk_weights(cfg, i)) for i in range(n_regs)]
+        return pool, uids
+
+    def test_unclaimed_stage_expires(self, setup):
+        """Regression for the prefetch leak: a stage no admission ever
+        claims (cancelled / drained / routed-away request) is dropped
+        after ``staging_ttl`` ticks and its device copy freed."""
+        cfg, _ = setup
+        pool, (u0, *_) = self.mk_pool(cfg, staging_ttl=3)
+        assert pool.prefetch(u0)
+        assert pool.staged_now == 1
+        assert pool.get(u0).device_layers is not None
+        for _ in range(3):
+            pool.tick()
+        assert pool.staged_now == 1          # within TTL: still staged
+        pool.tick()                          # age > ttl: expired
+        assert pool.staged_now == 0
+        assert pool.staged_dropped == 1
+        assert pool.get(u0).device_layers is None
+        # the registration is intact: a later prefetch restages
+        assert pool.prefetch(u0)
+        assert pool.staged_now == 1
+
+    def test_refresh_resets_stage_age(self, setup):
+        """The scheduler re-prefetches queued requests every step; each
+        call refreshes the stage's age (no new H2D) so a stage a live
+        request still wants never expires under it."""
+        cfg, _ = setup
+        pool, (u0, *_) = self.mk_pool(cfg, staging_ttl=2)
+        pool.prefetch(u0)
+        for _ in range(6):                   # re-prefetch every tick
+            pool.tick()
+            assert pool.prefetch(u0)
+        assert pool.staged_now == 1
+        assert pool.prefetch_issued == 1     # one transfer, many refreshes
+        for _ in range(3):                   # stop refreshing
+            pool.tick()
+        assert pool.staged_now == 0
+        assert pool.staged_dropped == 1
+
+    def test_staging_budget_defers_prefetch(self, setup):
+        """The staging tier is BOUNDED: a prefetch past the budget is
+        deferred (returns False) instead of stacking device copies."""
+        cfg, _ = setup
+        pool, (u0, u1, u2) = self.mk_pool(cfg, staging_budget=1)
+        assert pool.prefetch(u0)
+        assert not pool.prefetch(u1)
+        assert pool.prefetch_deferred == 1
+        assert pool.staged_now == 1
+        assert pool.get(u1).device_layers is None
+        pool.acquire(u0)                     # install claims the stage
+        assert pool.staged_now == 0
+        assert pool.prefetch(u1)             # budget freed: staged now
+        assert pool.staged_now == 1
+
+    def test_install_claims_stage_not_counted_dropped(self, setup):
+        cfg, _ = setup
+        pool, (u0, *_) = self.mk_pool(cfg)
+        pool.prefetch(u0)
+        pool.acquire(u0)
+        assert pool.staged_now == 0
+        assert pool.staged_dropped == 0      # claimed, not leaked
+        assert pool.prefetch_hits == 1
+
+    def test_acquire_stall_bypasses_budget(self, setup):
+        """An admission-path stall stages directly even at budget — the
+        install claims the copy in the same call, nothing lingers."""
+        cfg, _ = setup
+        pool, (u0, u1, u2) = self.mk_pool(cfg, staging_budget=1)
+        pool.prefetch(u0)                    # budget now full
+        slot = pool.acquire(u1)              # never prefetched: stall path
+        assert slot is not None
+        assert pool.stalled_installs == 1
+        assert pool.get(u1).slot == slot
+        assert pool.staged_now == 1          # only u0's stage remains
+
+    def test_unregister_drops_stage(self, setup):
+        cfg, _ = setup
+        pool, (u0, *_) = self.mk_pool(cfg)
+        pool.prefetch(u0)
+        pool.unregister("a0")
+        assert pool.staged_now == 0
+        assert pool.staged_dropped == 1
+
+    def test_evict_policy_hook_picks_victim(self, setup):
+        """The eviction-policy hook sees the unpinned residents in
+        least-recently-acquired-first order and overrides the default
+        LRU choice."""
+        cfg, _ = setup
+        pool, (u0, u1, u2) = self.mk_pool(
+            cfg, evict_policy=lambda cands: cands[-1])   # MRU victim
+        pool.acquire(u0)
+        pool.release(u0)
+        pool.acquire(u1)
+        pool.release(u1)
+        pool.acquire(u2)                     # default LRU would evict u0
+        assert pool.get(u1).slot is None     # hook evicted the MRU
+        assert pool.get(u0).slot is not None
+
+    def test_evict_policy_must_return_candidate(self, setup):
+        cfg, _ = setup
+        pool, (u0, u1, u2) = self.mk_pool(
+            cfg, evict_policy=lambda cands: "nope#v1")
+        pool.acquire(u0)
+        pool.release(u0)
+        pool.acquire(u1)
+        pool.release(u1)
+        with pytest.raises(AssertionError):
+            pool.acquire(u2)
+
+    def test_affinity_classes_and_slot_gate(self, setup):
+        """host-only -> staged -> resident is 0 -> 1 -> 2 (the admission
+        ordering key); can_take_slot flips with pins (the scan's
+        doomed-acquire gate)."""
+        cfg, _ = setup
+        pool, (u0, u1, _) = self.mk_pool(cfg, num_slots=1)
+        assert pool.affinity_of(u0) == 0 and pool.affinity("a0") == 0
+        pool.prefetch(u0)
+        assert pool.affinity_of(u0) == 1
+        assert pool.can_take_slot()          # a free slot exists
+        pool.acquire(u0)
+        assert pool.affinity_of(u0) == 2 and pool.affinity("a0") == 2
+        assert not pool.can_take_slot()      # sole slot pinned
+        pool.release(u0)
+        assert pool.can_take_slot()          # unpinned resident victim
+        assert pool.affinity("unknown") == 0
+
+
+# ---------------------------------------------------------------------------
 # 3. engine-level: churn equivalence + heterogeneous ranks
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
@@ -409,13 +547,17 @@ def test_alora_base_reuse_survives_uid_keying(setup):
 # ---------------------------------------------------------------------------
 # 5. scheduler accounting under slot scarcity
 # ---------------------------------------------------------------------------
-def test_admission_queues_behind_pinned_slots(eng_setup):
+@pytest.mark.parametrize("policy", ["fcfs", "affinity"])
+def test_admission_queues_behind_pinned_slots(eng_setup, policy):
     """With one adapter slot and two long-running adapter requests, the
     second must wait for the first to UNPIN (finish), then complete —
-    no deadlock, no double-pin."""
+    no deadlock, no double-pin.  Strict FCFS pays an acquire_fail per
+    retry of the blocked head; the affinity scan sees the doomed
+    acquire coming (``can_take_slot``) and never issues it."""
     cfg, params, specs, weights = eng_setup
     eng = Engine(cfg, params, adapters=list(zip(specs[:2], weights[:2])),
-                 engine_cfg=EngineConfig(adapter_slots=1, max_running=4))
+                 engine_cfg=EngineConfig(adapter_slots=1, max_running=4,
+                                         admission_policy=policy))
     r0 = eng.submit(prompt_of(24, seed=1)
                     + list(specs[0].invocation_tokens), 6,
                     adapter_name="ad0")
@@ -425,10 +567,129 @@ def test_admission_queues_behind_pinned_slots(eng_setup):
     eng.step()
     assert eng.request(r0).adapter_slot == 1
     assert eng.request(r1).adapter_slot == 0     # queued behind eviction
-    assert eng.adapter_pool_stats().acquire_fails >= 1
+    if policy == "fcfs":
+        assert eng.adapter_pool_stats().acquire_fails >= 1
+    else:
+        assert eng.adapter_pool_stats().acquire_fails == 0
     eng.run_until_idle()
     assert len(eng.request(r1).output_tokens) == 6
     assert eng.adapter_pool.pinned_slots() == 0
+
+
+def test_affinity_admits_past_blocked_head(eng_setup):
+    """A request whose adapter cannot pin a slot must not head-block a
+    resident-adapter request queued behind it: the affinity scan skips
+    the blocked head (bumping its admission_skips) and admits the
+    resident one, while strict FCFS stays stuck on the head."""
+    cfg, params, specs, weights = eng_setup
+
+    def run(policy):
+        eng = Engine(cfg, params,
+                     adapters=list(zip(specs[:2], weights[:2])),
+                     engine_cfg=EngineConfig(adapter_slots=1,
+                                             max_running=3,
+                                             admission_policy=policy))
+        r0 = eng.submit(prompt_of(24, seed=1)
+                        + list(specs[0].invocation_tokens), 8,
+                        adapter_name="ad0", arrival_time=0.0)
+        eng.step()                      # ad0 resident + pinned
+        rb = eng.submit(prompt_of(24, seed=2)
+                        + list(specs[1].invocation_tokens), 4,
+                        adapter_name="ad1", arrival_time=1e-9)
+        ra = eng.submit(prompt_of(24, seed=3)
+                        + list(specs[0].invocation_tokens), 4,
+                        adapter_name="ad0", arrival_time=2e-9)
+        eng.step()
+        admitted = {r.req_id for r in eng.running}
+        skips = eng.request(rb).admission_skips
+        eng.run_until_idle()
+        return eng, rb, ra, admitted, skips
+
+    eng, rb, ra, admitted, skips = run("affinity")
+    assert ra in admitted and rb not in admitted
+    assert skips >= 1                            # overtaken, and counted
+    assert len(eng.request(rb).output_tokens) == 4   # still completes
+    assert eng.adapter_pool.pinned_slots() == 0
+    eng, rb, ra, admitted, _ = run("fcfs")
+    assert ra not in admitted and rb not in admitted  # head-blocked
+
+
+def test_starvation_cap_bounds_bypass(eng_setup):
+    """Property: no waiting request is ever overtaken by younger
+    admissions more than ``admission_starvation_cap`` times — once
+    capped it barriers the window until it admits."""
+    cfg, params, specs, weights = eng_setup
+    cap = 2
+    eng = Engine(cfg, params, adapters=list(zip(specs[:2], weights[:2])),
+                 engine_cfg=EngineConfig(adapter_slots=1, max_running=2,
+                                         admission_starvation_cap=cap))
+    hold = eng.submit(prompt_of(24, seed=0)
+                      + list(specs[0].invocation_tokens), 24,
+                      adapter_name="ad0", arrival_time=0.0)
+    eng.step()                          # ad0 pinned for a long time
+    rb = eng.submit(prompt_of(24, seed=1)
+                    + list(specs[1].invocation_tokens), 2,
+                    adapter_name="ad1", arrival_time=1e-9)
+    for k in range(6):                  # a stream of resident-adapter
+        eng.submit(prompt_of(24, seed=2 + k)             # overtakers
+                   + list(specs[0].invocation_tokens), 2,
+                   adapter_name="ad0", arrival_time=1e-9 * (2 + k))
+    admit_order, seen = [], set()
+    for _ in range(500):
+        if not (eng.pending or eng.waiting or eng.running):
+            break
+        eng.step()
+        for r in eng.running:
+            if r.req_id not in seen:
+                seen.add(r.req_id)
+                admit_order.append(r.req_id)
+        # the property: the cap bounds every queued request's bypasses
+        assert all(q.admission_skips <= cap for q in eng.waiting)
+    else:
+        raise AssertionError("engine did not drain")
+    # exactly `cap` younger admissions overtook rb, then it barriered:
+    # nothing younger admitted until rb itself got its slot
+    assert admit_order.index(rb) == admit_order.index(hold) + 1 + cap
+    assert eng.request(rb).admission_skips == cap
+    assert len(eng.request(rb).output_tokens) == 2
+    assert eng.adapter_pool.pinned_slots() == 0
+
+
+def test_affinity_churn_with_preemption_matches_oracle(eng_setup):
+    """Adapter churn + recompute-preemption under affinity reordering:
+    a KV pool too small for the working set forces preemptions while
+    slots cycle; tokens must still match the all-resident sequential
+    oracle and every pin and stage must drain."""
+    cfg, params, specs, weights = eng_setup
+    ads = list(zip(specs, weights))
+
+    def workload(eng, gen=4):
+        # 61 + 3 invocation tokens = 64 = exactly 4 blocks: the first
+        # decode token then needs a 5th block -> guaranteed starvation
+        # at num_blocks=8 with two requests running
+        rids = [eng.submit(prompt_of(61, seed=k)
+                           + list(s.invocation_tokens), gen,
+                           adapter_name=s.name, arrival_time=1e-9 * k)
+                for k, s in enumerate(specs)]
+        eng.run_until_idle()
+        return [eng.request(r).output_tokens for r in rids]
+
+    eng_o = Engine(cfg, params, adapters=ads,
+                   engine_cfg=EngineConfig(execution_mode="sequential",
+                                           max_running=2))
+    oracle = workload(eng_o)
+    assert eng_o.adapter_pool.evictions == 0     # oracle: all resident
+
+    eng = Engine(cfg, params, adapters=ads,
+                 engine_cfg=EngineConfig(adapter_slots=2, max_running=2,
+                                         num_blocks=8))
+    out = workload(eng)
+    assert out == oracle
+    assert eng.preemptions > 0                   # pool actually starved
+    assert eng.adapter_pool.evictions > 0        # slots actually cycled
+    assert eng.adapter_pool.pinned_slots() == 0
+    assert eng.adapter_pool.staged_now == 0
+    assert eng.kv_mgr.num_free() == eng.ecfg.num_blocks
 
 
 def test_failed_admission_never_wastes_an_install(setup, monkeypatch):

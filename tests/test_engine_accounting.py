@@ -489,6 +489,67 @@ def test_budget_and_block_accounting_under_adapter_churn(setup):
     assert eng.kv_mgr.num_free() == free0       # no block leaks
 
 
+def test_affinity_matches_fcfs_tokens_when_uncontended(setup):
+    """With slots uncontended (every adapter fits resident) the affinity
+    scheduler may still reorder admissions, but must emit exactly the
+    strict-FCFS oracle's tokens per request — greedy decode is
+    batch-composition independent, so reordering is invisible in the
+    outputs."""
+    outs = []
+    for policy in ("fcfs", "affinity"):
+        eng = mk_engine(setup, admission_policy=policy, adapter_slots=2,
+                        max_running=3)
+        rids = []
+        for i in range(6):
+            name = (None, "uq", "lm")[i % 3]
+            p = prompt_of(28, seed=i) + (list(INV) if name == "uq" else [])
+            rids.append(eng.submit(p, 4, adapter_name=name,
+                                   arrival_time=1e-9 * i))
+        eng.run_until_idle()
+        outs.append([eng.request(r).output_tokens for r in rids])
+        assert eng.adapter_pool.acquire_fails == 0   # truly uncontended
+    assert outs[0] == outs[1]
+    assert all(len(o) == 4 for o in outs[0])
+
+
+def test_prefetch_window_survives_full_engine(setup):
+    """Regression: the prefetch window used to be ``max_running -
+    len(running)`` — a saturated engine issued ZERO prefetches, exactly
+    when the queue-time H2D head start matters most.  Queued adapters
+    must be staged while the engine is full, and the stage must be
+    claimed (not leaked) once the request admits."""
+    eng = mk_engine(setup, max_running=1, adapter_slots=2)
+    eng.submit(prompt_of(24, seed=1), 16, arrival_time=0.0)
+    eng.step()
+    assert len(eng.running) == eng.ecfg.max_running
+    rid = eng.submit(prompt_of(24, seed=2) + list(INV), 2,
+                     adapter_name="uq", arrival_time=1e-9)
+    eng.step()
+    assert len(eng.running) == eng.ecfg.max_running  # still saturated
+    pool = eng.adapter_pool
+    assert pool.prefetch_issued >= 1    # staged despite full occupancy
+    assert pool.affinity("uq") == 1     # weights on device, not resident
+    eng.run_until_idle()
+    assert len(eng.request(rid).output_tokens) == 2
+    assert pool.staged_now == 0         # install claimed the stage
+    assert pool.prefetch_hits >= 1
+    assert pool.stalled_installs == 0
+
+
+def test_out_of_order_submission_keeps_arrival_order(setup):
+    """``pending`` is a deque kept sorted on arrival_time: out-of-order
+    submission (replayed traces, router retries) must not let a later
+    arrival jump the clock queue."""
+    eng = mk_engine(setup)
+    a = eng.submit(prompt_of(16, seed=1), 2, arrival_time=3e-9)
+    b = eng.submit(prompt_of(16, seed=2), 2, arrival_time=1e-9)
+    c = eng.submit(prompt_of(16, seed=3), 2, arrival_time=2e-9)
+    assert [r.req_id for r in eng.pending] == [b, c, a]
+    eng.run_until_idle()
+    for rid in (a, b, c):
+        assert len(eng.request(rid).output_tokens) == 2
+
+
 # ---------------------------------------------------------------------------
 # 8. scheduler starvation must not hold a partial block claim
 # ---------------------------------------------------------------------------
