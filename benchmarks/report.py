@@ -261,6 +261,26 @@ def audit_table(recs):
               f"{'✓' if r.get('sync_async_identical') else '✗'} |")
 
 
+def static_pass_table(recs):
+    """Static-analysis summary records (``python -m repro.analysis
+    --json`` appends one per pass): the hot-path lint (Pass B) and the
+    resource-lifecycle check (Pass C).  A red row here means the
+    scheduler can leak KV blocks / state slots / adapter pins / staged
+    weights on some exit path — the class of bug behind five historical
+    incidents."""
+    print("\n### Static analysis — hot-path lint + lifecycle check\n")
+    print("| pass | status | violations |")
+    print("|---|---|---|")
+    names = {"hotpath_lint": "hot-path lint (Pass B)",
+             "lifecycle_check": "resource lifecycle (Pass C)"}
+    for r in sorted(recs, key=lambda r: r["kind"]):
+        first = r["violations"][0] if r.get("violations") else ""
+        status = "ok" if r["ok"] else \
+            f"**FAIL** ({r.get('n_violations', len(r.get('violations', [])))})"
+        print(f"| {names.get(r['kind'], r['kind'])} | {status} | "
+              f"{first or '—'} |")
+
+
 def main():
     pod = load(os.path.join(BASE, "dryrun_all.jsonl"))
     # dedup: last record per key wins
@@ -329,11 +349,25 @@ def main():
                                     key=lambda r: r["arch"]))
     audit = load(os.path.join(BASE, "analysis_audit.jsonl"))
     if audit:
-        # append-mode artifact: last record per (arch, mesh) wins
-        latest = {}
-        for r in audit:
-            latest[(r["arch"], r["mesh"])] = r
-        audit_table(list(latest.values()))
+        # the append-mode artifact interleaves compiled-step records
+        # (keyed arch × mesh) with static-pass summary records (keyed
+        # by pass kind, from --json); split before deduping
+        compiled = [r for r in audit if "arch" in r]
+        static = [r for r in audit
+                  if r.get("kind") in ("hotpath_lint",
+                                       "lifecycle_check")]
+        if compiled:
+            # last record per (arch, mesh) wins
+            latest = {}
+            for r in compiled:
+                latest[(r["arch"], r["mesh"])] = r
+            audit_table(list(latest.values()))
+        if static:
+            # last record per pass wins
+            latest = {}
+            for r in static:
+                latest[r["kind"]] = r
+            static_pass_table(list(latest.values()))
 
 
 if __name__ == "__main__":

@@ -9,10 +9,18 @@ Two passes, both gating CI (run `python -m repro.analysis`):
   import ``repro.analysis.step_audit`` directly after doing so.
 * ``hotpath_lint`` — AST lint of ``serving/`` + ``kernels/`` enforcing
   the schedule/submit/retire phase discipline (no host syncs or eager
-  dispatch on the hot path).  Pure stdlib; re-exported here.
+  dispatch on the hot path) and the B5 phase protocol (retire-only
+  mutations unreachable from schedule/submit).  Pure stdlib.
+* ``lifecycle_check`` — Pass C: path-sensitive resource-lifecycle
+  dataflow over ``serving/`` proving every acquire-shaped resource
+  (KV blocks, state slots, run slots, adapter pins, staged weights,
+  encoder-KV stacks) is released or transferred on every exit path.
+  Pure stdlib.
 
 See ``src/repro/analysis/README.md`` for the invariant catalogue.
 """
 from repro.analysis.hotpath_lint import Violation, lint_files, lint_tree
+from repro.analysis.lifecycle_check import check_files, check_tree
 
-__all__ = ["Violation", "lint_files", "lint_tree"]
+__all__ = ["Violation", "check_files", "check_tree", "lint_files",
+           "lint_tree"]

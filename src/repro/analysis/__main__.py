@@ -1,8 +1,11 @@
 """CLI for the invariant analyzer: ``python -m repro.analysis``.
 
-Runs the hot-path lint (fast, pure AST) and the compiled-step HLO audit
-(lowers + compiles the mixed step per config × mesh).  Exits non-zero
-on any violation or fingerprint drift — this is the CI gate.
+Runs the hot-path lint (Pass B) + resource-lifecycle check (Pass C) —
+both fast, pure AST — and the compiled-step HLO audit (Pass A: lowers
++ compiles the mixed step per config × mesh).  Exits non-zero on any
+violation or fingerprint drift — this is the CI gate.  ``--json``
+additionally appends one summary record per static pass to
+``analysis_audit.jsonl`` so ``benchmarks/report.py`` can render them.
 
 Must set the XLA host-platform flags BEFORE jax initializes, so the
 jax-importing audit module is imported lazily inside ``main``.
@@ -42,8 +45,13 @@ def main(argv=None) -> int:
                          "(fixture/debug mode)")
     ap.add_argument("--out", default=None,
                     help="results directory for analysis_audit.jsonl + "
-                         "analysis_fingerprint_diff.txt (default: "
+                         "analysis_fingerprint_diff.txt + "
+                         "analysis_lifecycle.txt (default: "
                          "<repo>/results)")
+    ap.add_argument("--json", action="store_true",
+                    help="append one summary record per static pass "
+                         "(hotpath_lint, lifecycle_check) to "
+                         "analysis_audit.jsonl for benchmarks/report.py")
     args = ap.parse_args(argv)
 
     repo_root, src = _repo_paths()
@@ -52,14 +60,39 @@ def main(argv=None) -> int:
 
     if not args.skip_lint:
         from repro.analysis.hotpath_lint import lint_files, lint_tree
+        from repro.analysis.lifecycle_check import check_files, check_tree
         if args.lint_paths is not None:
             violations = lint_files(list(args.lint_paths))
+            lifecycle = check_files(list(args.lint_paths))
         else:
             violations = lint_tree(src)
+            lifecycle = check_tree(src)
         for v in violations:
             print(v, file=sys.stderr)
         print(f"[lint] {len(violations)} violation(s)")
-        failed |= bool(violations)
+        for v in lifecycle:
+            print(v, file=sys.stderr)
+        print(f"[lifecycle] {len(lifecycle)} violation(s)")
+        failed |= bool(violations) or bool(lifecycle)
+        # violation artifact for the CI failure upload (removed when
+        # clean so a green run never ships a stale red artifact)
+        os.makedirs(out_dir, exist_ok=True)
+        lpath = os.path.join(out_dir, "analysis_lifecycle.txt")
+        if lifecycle:
+            with open(lpath, "w") as f:
+                f.write("".join(f"{v}\n" for v in lifecycle))
+        elif os.path.exists(lpath):
+            os.remove(lpath)
+        if args.json:
+            with open(os.path.join(out_dir, "analysis_audit.jsonl"),
+                      "a") as f:
+                for kind, vs in (("hotpath_lint", violations),
+                                 ("lifecycle_check", lifecycle)):
+                    f.write(json.dumps({
+                        "kind": kind, "ok": not vs,
+                        "n_violations": len(vs),
+                        "violations": [str(v) for v in vs],
+                    }) + "\n")
 
     if not args.skip_audit:
         # the 2x4 host mesh needs 8 XLA host devices; both env vars are

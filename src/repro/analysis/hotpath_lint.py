@@ -32,6 +32,17 @@ inside ``Engine.step``'s call graph:
       (``obs-sync``) is a violation, with no ``sync-ok`` annotation
       escape.  Exporters (``repro.obs.export``) are exempt: they never
       run on the step path.
+  B5  phase protocol: the value-dependent state mutations PR 5
+      deferred to the retire phase (``_finish_requests``, decode
+      hash-chain extension, decode-block registration, preemption —
+      the RETIRE_ONLY table) must be *unreachable* from schedule/
+      submit-phase code.  A resolvable hot-graph call site to one of
+      them is a ``phase-retire-only`` violation unless the line is
+      annotated ``# phase: retire-ok (<reason>)`` — sanctioned sites
+      are the drain-guarded starvation preempt in ``Engine.step`` and
+      the sync-oracle-only paths, where the value dependency is
+      provably satisfied.  Annotations are audited: one not attached
+      to a hot call site of a RETIRE_ONLY function is ``phase-stale``.
 
 The call graph is intraprocedural over the scanned files: ``self.x()``
 resolves within the class, ``self.<attr>.x()`` through the static
@@ -53,6 +64,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
 SYNC_OK_ANNOTATION = "hotpath: sync-ok"
+PHASE_OK_ANNOTATION = "phase: retire-ok"
 D2H_LOGGER = "log_d2h"
 JNP_ALLOWED = frozenset({"asarray"})
 
@@ -73,6 +85,17 @@ SEQUENTIAL_ORACLE: Set[Tuple[str, str]] = {
     ("ModelRunner", "execute_batch"),
     ("ModelRunner", "decode_batch"),
     ("ModelRunner", "prefill_chunk"),
+}
+# B5: value-dependent retire-phase mutations that schedule/submit code
+# must never reach — patching PENDING placeholders, extending the
+# decode hash chain, registering decode blocks and preempting all
+# require token VALUES the async pipeline has not synced yet.  Hot
+# call sites to these need an explicit ``# phase: retire-ok`` waiver.
+RETIRE_ONLY: Set[Tuple[str, str]] = {
+    ("Engine", "_finish_requests"),
+    ("Engine", "_extend_hash_chain"),
+    ("Engine", "_register_decode_block"),
+    ("Engine", "_preempt"),
 }
 # instance-attribute → class resolution for cross-object calls
 ATTR_CLASSES: Dict[str, str] = {
@@ -103,6 +126,13 @@ ROOTS: Tuple[Tuple[str, str], ...] = (
     ("Engine", "outstanding_tokens"),
     ("Engine", "adapter_residency"),
     ("Engine", "adapter_affinity"),
+    # PR 9 admission paths, rooted explicitly so B1/B2 coverage
+    # survives refactors that break the intraprocedural resolution
+    # (e.g. a local ``pool = self.adapter_pool`` receiver)
+    ("Engine", "_admit_affinity"),
+    ("AdapterPool", "tick"),
+    ("AdapterPool", "can_take_slot"),
+    ("AdapterPool", "affinity_of"),
 )
 
 
@@ -148,12 +178,13 @@ def _index_functions(paths: List[str]) -> Dict[Tuple[Optional[str], str],
     return funcs
 
 
-def _called_targets(cls: Optional[str], fn: ast.FunctionDef,
-                    attr_classes: Dict[str, str]
-                    ) -> List[Tuple[Optional[str], str]]:
-    """Resolvable call targets inside ``fn``: ``self.x()`` → same class,
-    ``self.<attr>.x()`` / ``<anything>.<attr>.x()`` → attr table."""
-    out: List[Tuple[Optional[str], str]] = []
+def _call_sites(cls: Optional[str], fn: ast.FunctionDef,
+                attr_classes: Dict[str, str]
+                ) -> List[Tuple[Tuple[Optional[str], str], int]]:
+    """Resolvable call sites inside ``fn`` with their line numbers:
+    ``self.x()`` → same class, ``self.<attr>.x()`` /
+    ``<anything>.<attr>.x()`` → attr table."""
+    out: List[Tuple[Tuple[Optional[str], str], int]] = []
     for node in ast.walk(fn):
         if not (isinstance(node, ast.Call)
                 and isinstance(node.func, ast.Attribute)):
@@ -161,11 +192,18 @@ def _called_targets(cls: Optional[str], fn: ast.FunctionDef,
         base = node.func.value
         if isinstance(base, ast.Name) and base.id == "self" \
                 and cls is not None:
-            out.append((cls, node.func.attr))
+            out.append(((cls, node.func.attr), node.lineno))
         elif isinstance(base, ast.Attribute) \
                 and base.attr in attr_classes:
-            out.append((attr_classes[base.attr], node.func.attr))
+            out.append(((attr_classes[base.attr], node.func.attr),
+                        node.lineno))
     return out
+
+
+def _called_targets(cls: Optional[str], fn: ast.FunctionDef,
+                    attr_classes: Dict[str, str]
+                    ) -> List[Tuple[Optional[str], str]]:
+    return [tgt for tgt, _ in _call_sites(cls, fn, attr_classes)]
 
 
 def _reachable_hot(funcs, roots, stop, attr_classes
@@ -223,13 +261,18 @@ def _sync_call_kind(node: ast.Call) -> Optional[str]:
     return None
 
 
-def _line_annotated(lines: List[str], lineno: int) -> bool:
-    """True if the 1-based source line (or the line above it — for
-    call expressions wrapped across lines) carries the annotation."""
+def _annotated_at(lines: List[str], lineno: int,
+                  marker: str) -> Optional[int]:
+    """The 1-based line carrying ``marker`` if the source line (or the
+    line above it — for call expressions wrapped across lines) does."""
     for ln in (lineno, lineno - 1):
-        if 1 <= ln <= len(lines) and SYNC_OK_ANNOTATION in lines[ln - 1]:
-            return True
-    return False
+        if 1 <= ln <= len(lines) and marker in lines[ln - 1]:
+            return ln
+    return None
+
+
+def _line_annotated(lines: List[str], lineno: int) -> bool:
+    return _annotated_at(lines, lineno, SYNC_OK_ANNOTATION) is not None
 
 
 def _calls_logger(fn: ast.FunctionDef) -> bool:
@@ -312,6 +355,49 @@ def _check_obs_function(key, fobj: _Func) -> List[Violation]:
     return out
 
 
+def _check_phase_protocol(funcs, hot, retire_only, attr_classes,
+                          paths) -> List[Violation]:
+    """B5: flag resolvable hot-graph call sites into the RETIRE_ONLY
+    table unless waived with ``# phase: retire-ok``, and audit every
+    waiver so stale ones cannot silently widen the sanctioned set."""
+    out: List[Violation] = []
+    used: Set[Tuple[str, int]] = set()
+    for key in sorted(hot, key=lambda k: (k[0] or "", k[1])):
+        if key in retire_only:
+            # retire-only functions may call each other freely
+            continue
+        fobj = funcs[key]
+        qn = _qualname(*key)
+        for tgt, lineno in _call_sites(key[0], fobj.node, attr_classes):
+            if tgt not in retire_only:
+                continue
+            ann = _annotated_at(fobj.source_lines, lineno,
+                                PHASE_OK_ANNOTATION)
+            if ann is not None:
+                used.add((fobj.path, ann))
+            else:
+                out.append(Violation(
+                    fobj.path, lineno, "phase-retire-only",
+                    f"{qn}: calls retire-only {_qualname(*tgt)} from "
+                    "the schedule/submit phase — its bookkeeping needs "
+                    "token values the async pipeline has not synced; "
+                    "defer it to the retire phase or annotate "
+                    f"'# {PHASE_OK_ANNOTATION} (<reason>)' if the "
+                    "value dependency is provably satisfied here"))
+    for path in paths:
+        with open(path) as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines, start=1):
+            if PHASE_OK_ANNOTATION in line and (path, i) not in used:
+                out.append(Violation(
+                    path, i, "phase-stale",
+                    f"'{PHASE_OK_ANNOTATION}' annotation not attached "
+                    "to a hot call site of a RETIRE_ONLY function — it "
+                    "waives nothing; remove it (or the table entry it "
+                    "once waived)"))
+    return out
+
+
 def _check_jitted_time(funcs) -> List[Violation]:
     out: List[Violation] = []
     for key, fobj in funcs.items():
@@ -336,15 +422,17 @@ def lint_files(paths: List[str], *,
                roots: Tuple[Tuple[str, str], ...] = ROOTS,
                retire: Optional[Set[Tuple[str, str]]] = None,
                oracle: Optional[Set[Tuple[str, str]]] = None,
+               retire_only: Optional[Set[Tuple[str, str]]] = None,
                attr_classes: Optional[Dict[str, str]] = None
                ) -> List[Violation]:
-    """Lint ``paths`` (call-graph rules B1/B2 from ``roots``) plus
-    ``kernel_paths`` (B1 everywhere) plus ``obs_paths`` (B4 wholesale —
-    trace recording is also indexed into the call graph, so hot-graph
-    ``self.tracer.*`` calls resolve and get B1/B2 on top) plus B3 over
-    everything."""
+    """Lint ``paths`` (call-graph rules B1/B2 from ``roots``, phase
+    protocol B5 against ``retire_only``) plus ``kernel_paths`` (B1
+    everywhere) plus ``obs_paths`` (B4 wholesale — trace recording is
+    also indexed into the call graph, so hot-graph ``self.tracer.*``
+    calls resolve and get B1/B2 on top) plus B3 over everything."""
     retire = RETIRE_PHASE if retire is None else retire
     oracle = SEQUENTIAL_ORACLE if oracle is None else oracle
+    retire_only = RETIRE_ONLY if retire_only is None else retire_only
     attr_classes = ATTR_CLASSES if attr_classes is None else attr_classes
     funcs = _index_functions(list(paths) + list(obs_paths))
     ofuncs = _index_functions(list(obs_paths))
@@ -353,6 +441,7 @@ def lint_files(paths: List[str], *,
     # phase tables must describe code that exists — a stale entry would
     # silently widen (or shrink) the checked surface
     for label, table in (("retire", retire), ("oracle", oracle),
+                         ("retire-only", retire_only),
                          ("root", set(roots))):
         for entry in sorted(table):
             if entry not in funcs:
@@ -365,6 +454,8 @@ def lint_files(paths: List[str], *,
     for key in sorted(hot, key=lambda k: (k[0] or "", k[1])):
         violations.extend(_check_hot_function(key, funcs[key],
                                               jnp_rule=True))
+    violations.extend(_check_phase_protocol(funcs, hot, retire_only,
+                                            attr_classes, list(paths)))
     for key in sorted(kfuncs, key=lambda k: (k[0] or "", k[1])):
         violations.extend(_check_hot_function(key, kfuncs[key],
                                               jnp_rule=False))

@@ -263,8 +263,28 @@ def fingerprint_of(hlo_text: str) -> Dict[str, Dict]:
                              for k in sorted(stats.by_kind)}}
 
 
+# the config knob most likely responsible when a collective kind
+# drifts — turns a `--update-goldens` review from HLO archaeology into
+# checking one setting
+_DRIFT_KNOBS: Dict[str, str] = {
+    "all-gather": "EngineConfig.data_shard_tokens / the mesh `data` "
+                  "axis (token-axis sharding gathers)",
+    "reduce-scatter": "the mesh `model` axis / StepShardings (TP "
+                      "matmul partials)",
+    "all-reduce": "the mesh `model` axis / StepShardings (TP matmul "
+                  "partials)",
+    "collective-permute": "StepShardings output layouts (resharding "
+                          "between pinned layouts)",
+    "all-to-all": "StepShardings output layouts / expert or head "
+                  "re-partitioning",
+}
+
+
 def diff_fingerprint(arch: str, mesh_name: str, seen: Dict,
                      golden: Optional[Dict]) -> str:
+    """Human-reviewable drift report, grouped per collective op: count
+    and result-byte deltas side by side, plus the config knob most
+    likely to have moved them."""
     if golden is None:
         return (f"{arch} [{mesh_name}]: no golden checked in at "
                 f"{golden_path(arch, mesh_name)} — run "
@@ -272,13 +292,27 @@ def diff_fingerprint(arch: str, mesh_name: str, seen: Dict,
     if seen == golden:
         return ""
     lines = [f"{arch} [{mesh_name}]: collective fingerprint drift"]
-    for table in ("counts", "result_bytes"):
-        g, s = golden.get(table, {}), seen.get(table, {})
-        for kind in sorted(set(g) | set(s)):
-            if g.get(kind) != s.get(kind):
-                lines.append(f"  {table:12s} {kind:20s} "
-                             f"golden={g.get(kind, '-')} -> "
-                             f"seen={s.get(kind, '-')}")
+    gc, sc = golden.get("counts", {}), seen.get("counts", {})
+    gb, sb = golden.get("result_bytes", {}), seen.get("result_bytes", {})
+    for kind in sorted(set(gc) | set(sc) | set(gb) | set(sb)):
+        c0, c1 = gc.get(kind, 0), sc.get(kind, 0)
+        b0, b1 = gb.get(kind, 0), sb.get(kind, 0)
+        if c0 == c1 and b0 == b1:
+            continue
+        if c0 == 0 and b0 == 0:
+            what, knob = "NEW op", ("a partitioner/StepShardings "
+                                    "change introduced this collective")
+        elif c1 == 0 and b1 == 0:
+            what, knob = "GONE", ("a partitioner/StepShardings change "
+                                  "removed this collective")
+        else:
+            what = "drifted"
+            knob = _DRIFT_KNOBS.get(
+                kind, "mesh shape / StepShardings for this op")
+        lines.append(f"  {kind:20s} {what:8s} "
+                     f"count {c0} -> {c1} ({c1 - c0:+d}), "
+                     f"bytes {b0} -> {b1} ({b1 - b0:+d})")
+        lines.append(f"  {'':20s} likely knob: {knob}")
     return "\n".join(lines) + "\n"
 
 

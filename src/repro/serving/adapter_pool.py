@@ -323,6 +323,21 @@ class AdapterPool:
         for uid in expired:
             self._drop_stage(uid, "expired")
 
+    def drop_unclaimed_stages(self) -> int:
+        """Drop EVERY unclaimed staging copy now; returns the count.
+
+        The TTL expiry in ``tick`` only runs while the engine is being
+        stepped — a drained replica (``Router.stop_replica``) never
+        ticks again, so stages prefetched for requests that were
+        re-routed away would pin full weight copies in HBM for the
+        process lifetime.  Dropping is always safe: a later stalled
+        install re-stages on demand.
+        """
+        dropped = list(self._staged)
+        for uid in dropped:
+            self._drop_stage(uid, "drain")
+        return len(dropped)
+
     def _drop_stage(self, uid: str, reason: str) -> None:
         reg = self._by_uid.get(uid)
         if reg is not None:

@@ -703,6 +703,9 @@ class Engine:
         else:
             self._execute_decodes(decodes)
             self._execute_prefills(prefills)
+            # sequential oracle: the step above ran to completion, so
+            # every token value is already host-known
+            # phase: retire-ok (sequential oracle path)
             self._finish_requests()
         # block starvation with zero progress: preempt the most recent
         # running request (vLLM recompute-preemption) so the others can
@@ -713,6 +716,9 @@ class Engine:
         # so preemption never races an in-flight step.
         if n_decode == 0 and n_prefill == 0 and prev is None \
                 and self.running:
+            # drain-guarded: prev is None means no unretired step is in
+            # flight, so no PENDING value can race the rollback
+            # phase: retire-ok (pipeline drained)
             self._preempt(self.running[-1])
         return self.clock - t_before
 
@@ -862,6 +868,9 @@ class Engine:
                     # retires, and by then the live pools have advanced
                     # past the state, so the speculative snapshot is the
                     # only way to re-register it.
+                    # guarded by `known and not use_async`: every token
+                    # through block b is host-known on this branch
+                    # phase: retire-ok (sync path, tokens host-known)
                     self._extend_hash_chain(r, b)
                     cached = self.st_mgr.lookup(r.hashes[b]) is not None
                 if not cached:

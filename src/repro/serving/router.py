@@ -244,6 +244,12 @@ class Router:
         displaced = list(eng.pending) + list(eng.waiting)
         eng.pending.clear()
         eng.waiting.clear()
+        # drop the replica's unclaimed staging-tier prefetches NOW: a
+        # stopped replica only steps until its admitted work drains, so
+        # the pool's TTL expiry (tick) may never run again and stages
+        # prefetched for the re-routed queue would pin HBM forever
+        if eng.adapter_pool is not None:
+            eng.adapter_pool.drop_unclaimed_stages()
         # forget sessions pinned to the stopped replica; the next turn
         # re-scores (its prefix blocks are gone with the replica anyway)
         self._sessions = {s: r for s, r in self._sessions.items()

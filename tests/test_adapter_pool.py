@@ -295,6 +295,26 @@ class TestStagingTier:
         assert pool.get(u1).slot == slot
         assert pool.staged_now == 1          # only u0's stage remains
 
+    def test_drop_unclaimed_stages_frees_all_now(self, setup):
+        """Regression for the drained-replica stage pin: a stopped
+        replica never ticks again, so TTL expiry can't run — the drain
+        path drops every unclaimed stage eagerly instead."""
+        cfg, _ = setup
+        pool, (u0, u1, _) = self.mk_pool(cfg, staging_ttl=100)
+        assert pool.prefetch(u0) and pool.prefetch(u1)
+        assert pool.staged_now == 2
+        assert pool.drop_unclaimed_stages() == 2
+        assert pool.staged_now == 0
+        assert pool.staged_dropped == 2
+        assert pool.get(u0).device_layers is None
+        assert pool.get(u1).device_layers is None
+        # registrations intact: a later prefetch restages on demand
+        assert pool.prefetch(u0)
+        assert pool.staged_now == 1
+        # idempotent once drained
+        assert pool.drop_unclaimed_stages() == 1
+        assert pool.drop_unclaimed_stages() == 0
+
     def test_unregister_drops_stage(self, setup):
         cfg, _ = setup
         pool, (u0, *_) = self.mk_pool(cfg)

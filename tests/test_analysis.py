@@ -5,8 +5,14 @@
 * the ``d2h_fetches`` ring-buffer trim;
 * every Pass-A check against synthetic HLO snippets, firing and not;
 * every Pass-B lint rule against AST fixtures, firing and not;
-* the real tree lints clean, the real goldens are checked in for every
-  config × mesh, and one real compiled-step audit passes end to end;
+* every Pass-C lifecycle rule against AST fixtures — one per historical
+  leak (admission rollback, encoder-KV, OutOfBlocks claim, staging,
+  prefetch-window collapse), each flagged pre-fix and clean as fixed;
+* the B5 phase protocol (retire-only mutations unreachable from
+  schedule/submit without an annotated sanction);
+* the real tree lints AND lifecycle-checks clean, the real goldens are
+  checked in for every config × mesh, and one real compiled-step audit
+  passes end to end;
 * the CLI's exit-code contract.
 """
 import json
@@ -16,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.hotpath_lint import lint_files, lint_tree
+from repro.analysis.lifecycle_check import check_files, check_tree
 from repro.analysis.step_audit import (
     MESHES,
     check_bf16_upcasts,
@@ -219,12 +226,21 @@ def test_fingerprint_diff():
              "result_bytes": {"all-reduce": 512}}
     d = diff_fingerprint("a", "2x4", fp, drift)
     assert "all-reduce" in d and "drift" in d
+    # per-op grouping names the golden -> seen count delta and the
+    # likely config knob
+    assert "10 -> 9 (-1)" in d and "likely knob" in d
+    assert "model" in d          # all-reduce drift -> model-axis knob
+    new_op = {"counts": {"all-reduce": 9, "all-gather": 2},
+              "result_bytes": {"all-reduce": 512, "all-gather": 64}}
+    d2 = diff_fingerprint("a", "2x4", new_op, fp)
+    assert "NEW op" in d2 and "all-gather" in d2
     assert "no golden" in diff_fingerprint("a", "2x4", fp, None)
 
 
 # --------------------------------------------------- Pass B: lint fixtures
 FIXTURE_KW = dict(roots=(("Engine", "step"),),
                   retire={("Engine", "_retire")}, oracle=set(),
+                  retire_only=set(),
                   attr_classes={"runner": "ModelRunner"})
 
 GOOD_SRC = '''\
@@ -342,7 +358,7 @@ def test_lint_phase_table_honesty(tmp_path):
                     roots=(("Engine", "step"),),
                     retire={("Engine", "_retire"),
                             ("Engine", "_gone_with_refactor")},
-                    oracle=set(),
+                    oracle=set(), retire_only=set(),
                     attr_classes={"runner": "ModelRunner"})
     assert [v.rule for v in vs] == ["phase-table"]
     assert "_gone_with_refactor" in vs[0].message
@@ -392,9 +408,304 @@ def test_lint_kernels_checked_even_unreachable(tmp_path):
     assert "_kernel_body" in vs[0].message
 
 
+# ------------------------------------ Pass C: resource-lifecycle fixtures
+#
+# One fixture pair per historical leak: the pre-fix shape (Pass C must
+# flag it) and the shipped fix (must analyze clean).  ``teardown={}``
+# disables the real teardown-coverage table so fixtures aren't required
+# to define Engine._preempt / _finish_requests.
+
+def _lc(tmp_path, src, teardown=None):
+    return check_files([_write(tmp_path, "fix.py", src)],
+                       teardown=teardown if teardown is not None else {})
+
+
+# historical leak 1: admission rollback — OutOfBlocks mid-claim returned
+# without releasing the cache-matched blocks or the speculative state
+# slot (pre-PR2 shape)
+LC_ROLLBACK_LEAK = '''\
+class Engine:
+    def _try_admit(self, req):
+        m = self.cache.match_and_acquire(req.prompt)
+        n, kv_blocks, state_slot = m.n_tokens, m.kv_blocks, m.state_slot
+        new_blocks = []
+        try:
+            for _ in range(3):
+                new_blocks.append(self.kv_mgr.allocate())
+        except OutOfBlocks:
+            return False
+        req.block_ids = kv_blocks + new_blocks
+        return True
+'''
+
+LC_ROLLBACK_FIXED = '''\
+class Engine:
+    def _try_admit(self, req):
+        m = self.cache.match_and_acquire(req.prompt)
+        n, kv_blocks, state_slot = m.n_tokens, m.kv_blocks, m.state_slot
+        new_blocks = []
+        def bail():
+            if self.kv_mgr is not None:
+                self.kv_mgr.release_all(kv_blocks + new_blocks)
+            if state_slot is not None:
+                self.st_mgr.release(state_slot)
+            return False
+        try:
+            for _ in range(3):
+                new_blocks.append(self.kv_mgr.allocate())
+        except OutOfBlocks:
+            return bail()
+        req.block_ids = kv_blocks + new_blocks
+        if state_slot is not None:
+            self.st_mgr.release(state_slot)
+        return True
+'''
+
+
+def test_lc_rollback_leak_and_fix(tmp_path):
+    vs = _lc(tmp_path, LC_ROLLBACK_LEAK)
+    assert vs and set(v.rule for v in vs) == {"leak"}
+    # both the matched KV blocks and the optional state slot leak
+    assert any("kv" in v.message for v in vs)
+    assert _lc(tmp_path, LC_ROLLBACK_FIXED) == []
+
+
+# historical leak 2: encoder-KV stacks survived preemption — the
+# teardown released KV blocks, the run slot and the adapter pin but
+# forgot the _xkv entry
+LC_TEARDOWN_NO_XKV = '''\
+class Engine:
+    def _preempt(self, r):
+        self.kv_mgr.release_all(r.block_ids)
+        self._free_slots.append(r.run_slot)
+        self.adapter_pool.release(r.adapter_uid)
+'''
+
+LC_TEARDOWN_FIXED = LC_TEARDOWN_NO_XKV.replace(
+    "        self.adapter_pool.release(r.adapter_uid)\n",
+    "        self.adapter_pool.release(r.adapter_uid)\n"
+    "        self._xkv.pop(r.req_id, None)\n")
+
+LC_TEARDOWN_TABLE = {("Engine", "_preempt"):
+                     frozenset({"kv", "runslot", "adapter", "xkv"})}
+
+
+def test_lc_teardown_coverage(tmp_path):
+    vs = _lc(tmp_path, LC_TEARDOWN_NO_XKV, teardown=LC_TEARDOWN_TABLE)
+    assert [v.rule for v in vs] == ["teardown-missing"]
+    assert "xkv" in vs[0].message
+    assert _lc(tmp_path, LC_TEARDOWN_FIXED,
+               teardown=LC_TEARDOWN_TABLE) == []
+    # table honesty: a teardown entry naming a function the tree no
+    # longer defines is itself a violation
+    gone = {("Engine", "_gone"): frozenset({"kv"})}
+    vs = _lc(tmp_path, LC_TEARDOWN_FIXED, teardown=gone)
+    assert any(v.rule == "lifecycle-table" for v in vs)
+
+
+# historical leak 3: speculative decode-block claim — blocks claimed
+# into a local list, then `continue` on OutOfBlocks dropped them
+LC_CLAIM_LEAK = '''\
+class Engine:
+    def _schedule_decodes(self):
+        for r in self.running:
+            claimed = []
+            try:
+                while r.needs_more():
+                    claimed.append(self.kv_mgr.allocate())
+            except OutOfBlocks:
+                continue
+            r.block_ids.extend(claimed)
+'''
+
+LC_CLAIM_FIXED = '''\
+class Engine:
+    def _schedule_decodes(self):
+        ok = []
+        for r in self.running:
+            n_before = len(r.block_ids)
+            try:
+                while r.needs_more():
+                    r.block_ids.append(self.kv_mgr.allocate())
+            except OutOfBlocks:
+                pass
+            if r.still_needs():
+                while len(r.block_ids) > n_before:
+                    self.kv_mgr.release(r.block_ids.pop())
+                continue
+            ok.append(r)
+        return ok
+'''
+
+
+def test_lc_claim_leak_and_fix(tmp_path):
+    vs = _lc(tmp_path, LC_CLAIM_LEAK)
+    assert vs and set(v.rule for v in vs) == {"leak"}
+    assert _lc(tmp_path, LC_CLAIM_FIXED) == []
+
+
+# historical leak 4: staged weights pinned without registration — the
+# device copy landed on reg.device_layers but never entered _staged, so
+# no TTL expiry could ever free it
+LC_STAGING_LEAK = '''\
+class AdapterPool:
+    def prefetch(self, uid):
+        reg = self._by_uid[uid]
+        reg.device_layers = [self._put(lw) for lw in reg.layers]
+        return True
+'''
+
+LC_STAGING_FIXED = '''\
+class AdapterPool:
+    def _stage(self, reg):
+        reg.device_layers = [self._put(lw) for lw in reg.layers]
+        self._staged[reg.uid] = self._tick
+'''
+
+
+def test_lc_staging_leak_and_fix(tmp_path):
+    vs = _lc(tmp_path, LC_STAGING_LEAK)
+    assert vs and set(v.rule for v in vs) == {"leak"}
+    assert any("staged" in v.message for v in vs)
+    assert _lc(tmp_path, LC_STAGING_FIXED) == []
+
+
+# historical leak 5: prefetch-window collapse — bounding the prefetch
+# scan by `max_running - len(running)` makes the window shrink to zero
+# exactly when the engine is busiest, starving the staging tier
+LC_WINDOW_COLLAPSE = '''\
+from itertools import islice
+class Engine:
+    def step(self):
+        for uid in islice(self.pending,
+                          self.max_running - len(self.running)):
+            self.adapter_pool.prefetch(uid)
+'''
+
+LC_WINDOW_FIXED = '''\
+from itertools import islice
+class Engine:
+    def step(self):
+        for r in islice(self.waiting, self.ecfg.admission_window):
+            self.adapter_pool.prefetch(r.adapter_uid)
+'''
+
+
+def test_lc_window_collapse_and_fix(tmp_path):
+    vs = _lc(tmp_path, LC_WINDOW_COLLAPSE)
+    assert [v.rule for v in vs] == ["window-collapse"]
+    assert _lc(tmp_path, LC_WINDOW_FIXED) == []
+
+
+# ------------------------------------------ Pass C: rule-level fixtures
+def test_lc_plain_leak_at_early_return(tmp_path):
+    src = ('class Engine:\n'
+           '    def f(self):\n'
+           '        b = self.kv_mgr.allocate()\n'
+           '        if self.bad:\n'
+           '            return False\n'
+           '        self.kv_mgr.release(b)\n'
+           '        return True\n')
+    vs = _lc(tmp_path, src)
+    assert [v.rule for v in vs] == ["leak"]
+    assert "kv" in vs[0].message
+
+
+def test_lc_adapter_pin_narrowing_and_leak(tmp_path):
+    clean = ('class Engine:\n'
+             '    def f(self, req):\n'
+             '        slot = self.adapter_pool.acquire(req.adapter_uid)\n'
+             '        if slot is None:\n'
+             '            return False\n'
+             '        req.adapter_slot = slot\n'
+             '        return True\n')
+    assert _lc(tmp_path, clean) == []
+    leak = clean.replace(
+        "        req.adapter_slot = slot\n",
+        "        if req.too_big:\n"
+        "            return False\n"
+        "        req.adapter_slot = slot\n")
+    vs = _lc(tmp_path, leak)
+    assert [v.rule for v in vs] == ["leak"]
+    assert "adapter" in vs[0].message
+
+
+def test_lc_owner_annotation_and_honesty(tmp_path):
+    ann = ('class Engine:\n'
+           '    def f(self):\n'
+           '        b = self.kv_mgr.allocate()   # owner: self._ledger\n'
+           '        self._ledger.note(b)\n')
+    assert _lc(tmp_path, ann) == []
+    stale = ('class Engine:\n'
+             '    # owner: nothing acquired here\n'
+             '    def f(self):\n'
+             '        return 1\n')
+    vs = _lc(tmp_path, stale)
+    assert [v.rule for v in vs] == ["owner-unused"]
+
+
+# --------------------------------------- B5: phase-protocol fixtures
+B5_KW = dict(roots=(("Engine", "step"),), retire=set(), oracle=set(),
+             retire_only={("Engine", "_finish")}, attr_classes={})
+
+B5_SRC = '''\
+import numpy as np
+
+class Engine:
+    def step(self):
+        self._schedule()
+        self._finish()
+
+    def _schedule(self):
+        return np.array([1])
+
+    def _finish(self):
+        self.done = []
+'''
+
+
+def test_lint_phase_retire_only_fires(tmp_path):
+    vs = lint_files([_write(tmp_path, "b5.py", B5_SRC)], **B5_KW)
+    assert [v.rule for v in vs] == ["phase-retire-only"]
+    assert "_finish" in vs[0].message
+
+
+def test_lint_phase_annotation_sanctions(tmp_path):
+    src = B5_SRC.replace(
+        "        self._finish()\n",
+        "        # phase: retire-ok (test fixture sanction)\n"
+        "        self._finish()\n")
+    assert lint_files([_write(tmp_path, "b5.py", src)], **B5_KW) == []
+
+
+def test_lint_phase_stale_annotation_fires(tmp_path):
+    src = B5_SRC.replace(
+        "        self._finish()\n",
+        "        # phase: retire-ok (test fixture sanction)\n"
+        "        self._finish()\n").replace(
+        "        return np.array([1])\n",
+        "        # phase: retire-ok (sanctions nothing)\n"
+        "        return np.array([1])\n")
+    vs = lint_files([_write(tmp_path, "b5.py", src)], **B5_KW)
+    assert [v.rule for v in vs] == ["phase-stale"]
+
+
+def test_lint_retire_only_table_honesty(tmp_path):
+    kw = dict(B5_KW, retire_only={("Engine", "_gone")})
+    vs = lint_files([_write(tmp_path, "b5.py", B5_SRC)], **kw)
+    assert [v.rule for v in vs] == ["phase-table"]
+    assert "_gone" in vs[0].message
+
+
 # ------------------------------------------------------- the real tree
 def test_real_tree_lints_clean():
     assert lint_tree(SRC_ROOT) == []
+
+
+def test_real_tree_lifecycle_clean():
+    """The shipped scheduler provably releases or transfers every
+    acquire-shaped resource on every exit path."""
+    assert check_tree(SRC_ROOT) == []
 
 
 def test_goldens_checked_in_for_every_config_and_mesh():
@@ -445,6 +756,43 @@ def test_cli_lint_violation_exit1(tmp_path, capsys):
                _write(tmp_path, "bad.py", bad)])
     assert rc == 1
     assert "hot-sync" in capsys.readouterr().err
+
+
+def test_cli_json_records_clean_tree(tmp_path, capsys):
+    """--json appends one ok record per static pass; a clean run never
+    leaves a stale lifecycle artifact behind."""
+    from repro.analysis.__main__ import main
+    (tmp_path / "analysis_lifecycle.txt").write_text("stale\n")
+    assert main(["--skip-audit", "--json", "--out", str(tmp_path)]) == 0
+    with open(tmp_path / "analysis_audit.jsonl") as f:
+        recs = [json.loads(line) for line in f]
+    assert [r["kind"] for r in recs] == ["hotpath_lint",
+                                         "lifecycle_check"]
+    assert all(r["ok"] and r["n_violations"] == 0 for r in recs)
+    assert not (tmp_path / "analysis_lifecycle.txt").exists()
+
+
+def test_cli_lifecycle_violation_exit1_and_artifacts(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    leak = ('class Engine:\n'
+            '    def f(self):\n'
+            '        b = self.kv_mgr.allocate()\n'
+            '        if self.bad:\n'
+            '            return False\n'
+            '        self.kv_mgr.release(b)\n'
+            '        return True\n')
+    rc = main(["--skip-audit", "--json", "--out", str(tmp_path),
+               "--lint-paths", _write(tmp_path, "leak.py", leak)])
+    assert rc == 1
+    assert "leak" in capsys.readouterr().err
+    assert (tmp_path / "analysis_lifecycle.txt").exists()
+    with open(tmp_path / "analysis_lifecycle.txt") as f:
+        assert "leak" in f.read()
+    with open(tmp_path / "analysis_audit.jsonl") as f:
+        recs = [json.loads(line) for line in f]
+    lc = [r for r in recs if r.get("kind") == "lifecycle_check"]
+    assert len(lc) == 1 and not lc[0]["ok"]
+    assert lc[0]["n_violations"] >= 1 and lc[0]["violations"]
 
 
 def test_cli_audit_failure_exit1_and_artifacts(tmp_path, monkeypatch,

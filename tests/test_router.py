@@ -223,6 +223,25 @@ def test_drain_failover_loses_nothing(zoo):
     assert router.replicas[victim].idle
 
 
+def test_stop_replica_drops_unclaimed_stages(zoo):
+    """Regression: a stopped replica only steps until its admitted work
+    drains, so its pool's TTL expiry (tick) may never run again —
+    unclaimed staging-tier prefetches, e.g. for requests just re-routed
+    away, must be dropped at stop time, not pinned for the process
+    lifetime."""
+    router = mk_router(zoo, "granite-3.2-8b", 2)
+    victim = 0
+    pool = router.replicas[victim].adapter_pool
+    uid = next(iter(pool._by_uid))
+    assert pool.prefetch(uid)
+    assert pool.staged_now == 1
+    router.stop_replica(victim)
+    assert pool.staged_now == 0
+    assert pool.get(uid).device_layers is None
+    # survivor's stages are untouched
+    assert router.replicas[1].adapter_pool.staged_now == 0
+
+
 def test_drain_rerouted_tokens_match_oracle(zoo):
     """Rerouted requests re-prefill from scratch on the survivor —
     deterministic decoding means their tokens still match an untouched
